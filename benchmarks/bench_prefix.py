@@ -1,0 +1,50 @@
+"""Paper Figs. 11-12: prefix-cache hits + global hit rate under user-affinity
+routing (ShareGPT sessions), five repeated runs, vLLM-RR vs Gimbal.
+
+Uses the REAL cluster scheduling path (router + per-engine PrefixCache) with
+the DES providing time; hit counting is exact block accounting."""
+from __future__ import annotations
+
+import argparse
+import copy
+
+from benchmarks.common import ResultCache, emit
+from repro.configs import get_config
+from repro.sim.simulator import simulate
+from repro.workloads.sharegpt import sharegpt_trace
+
+
+def run(quick: bool = False, cache=None):
+    n_requests = 600 if quick else 2000
+    n_runs = 2 if quick else 5
+    rows = []
+    # calibrated to the paper's regime: ShareGPT replay is mostly distinct
+    # conversations, so the GLOBAL hit rate is small (paper: 3.64-3.80%) and
+    # only session continuations can hit — exactly where affinity routing acts
+    for variant in ("vllm", "gimbal"):
+        for run_i in range(n_runs):
+            trace = sharegpt_trace(n_requests=n_requests, n_users=n_requests // 4,
+                                   rps=8.0, seed=100 + run_i, vocab_size=50_000,
+                                   utterance_mean=120, continue_p=0.10)
+            res = simulate([copy.copy(r) for r in trace], variant,
+                           get_config("qwen3-30b-a3b"), n_engines=2, hw="a100",
+                           kv_pool_tokens=60_000)
+            rows.append({
+                "figure": "fig11_12_prefix", "variant": variant, "run": run_i,
+                "hit_blocks": res.prefix_hits, "probed_blocks": res.prefix_probed,
+                "hit_rate_pct": 100.0 * res.prefix_hit_rate,
+            })
+    emit(rows, "bench_prefix")
+    mean = lambda v: sum(r["hit_blocks"] for r in rows if r["variant"] == v) / n_runs
+    mrate = lambda v: sum(r["hit_rate_pct"] for r in rows if r["variant"] == v) / n_runs
+    dh = 100.0 * (mean("gimbal") - mean("vllm")) / max(mean("vllm"), 1)
+    dr = 100.0 * (mrate("gimbal") - mrate("vllm")) / max(mrate("vllm"), 1e-9)
+    print(f"# prefix hits: vllm {mean('vllm'):.0f} gimbal {mean('gimbal'):.0f} "
+          f"(+{dh:.1f}%, paper: +3%); hit-rate +{dr:.1f}% rel (paper: +4.4%)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -1,0 +1,35 @@
+"""Paper Fig. 10: throughput parity — Gimbal's latency wins must not cost
+throughput."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import RPS_GRID, VARIANTS, ResultCache, emit
+from repro.workloads.burstgpt import DISTRIBUTIONS
+
+
+def run(quick: bool = False, cache: ResultCache | None = None):
+    cache = cache or ResultCache()
+    rows = []
+    rps = RPS_GRID[-1]
+    for dist in DISTRIBUTIONS:
+        base = cache.get("vllm", dist, rps, 0)["throughput_tok_s"]
+        for variant in (("vllm", "gimbal") if quick else VARIANTS):
+            r = cache.get(variant, dist, rps, 0)
+            rows.append({
+                "figure": "fig10_throughput", "dist": dist, "variant": variant,
+                "throughput_tok_s": r["throughput_tok_s"],
+                "throughput_req_s": r["throughput_req_s"],
+                "vs_vllm_pct": 100.0 * (r["throughput_tok_s"] - base) / base,
+            })
+    emit(rows, "bench_throughput")
+    worst = min(r["vs_vllm_pct"] for r in rows if r["variant"] == "gimbal")
+    print(f"# throughput parity: worst gimbal-vs-vllm delta {worst:+.1f}% "
+          f"(paper: comparable)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

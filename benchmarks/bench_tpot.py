@@ -1,0 +1,55 @@
+"""Paper Figs. 8-9: TPOT across distributions x rates x variants + 3-seed
+repeat at the top rate."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (PAPER_RPS_LABELS, RPS_GRID, VARIANTS,
+                               ResultCache, emit)
+from repro.workloads.burstgpt import DISTRIBUTIONS
+
+
+def run(quick: bool = False, cache: ResultCache | None = None):
+    cache = cache or ResultCache()
+    rows = []
+    grid = [RPS_GRID[-1]] if quick else list(RPS_GRID)
+    labels = [PAPER_RPS_LABELS[-1]] if quick else list(PAPER_RPS_LABELS)
+    for rps, lbl in zip(grid, labels):
+        for dist in DISTRIBUTIONS:
+            base = cache.get("vllm", dist, rps, 0)["mean_tpot"]
+            for variant in VARIANTS:
+                r = cache.get(variant, dist, rps, 0)
+                rows.append({
+                    "figure": "fig8_tpot", "paper_rps": lbl, "dist": dist,
+                    "variant": variant, "mean_tpot_ms": 1e3 * r["mean_tpot"],
+                    "p99_tpot_ms": 1e3 * r["p99_tpot"],
+                    "vs_vllm_pct": 100.0 * (base - r["mean_tpot"]) / base,
+                })
+    seeds = (0,) if quick else (0, 1, 2)
+    agg = []
+    for dist in DISTRIBUTIONS:
+        means = {}
+        for variant in ("vllm", "gimbal"):
+            vals = [cache.get(variant, dist, RPS_GRID[-1], s)["mean_tpot"]
+                    for s in seeds]
+            means[variant] = sum(vals) / len(vals)
+        agg.append({"figure": "fig9_tpot_3seed", "dist": dist,
+                    "vllm_tpot_ms": 1e3 * means["vllm"],
+                    "gimbal_tpot_ms": 1e3 * means["gimbal"],
+                    "reduction_pct": 100.0 * (means["vllm"] - means["gimbal"])
+                    / means["vllm"]})
+    overall = sum(a["reduction_pct"] for a in agg) / len(agg)
+    agg.append({"figure": "fig9_tpot_3seed", "dist": "ALL",
+                "vllm_tpot_ms": float("nan"), "gimbal_tpot_ms": float("nan"),
+                "reduction_pct": overall})
+    emit(rows, "bench_tpot")
+    emit(agg, "bench_tpot_3seed")
+    print(f"# TPOT mean reduction across distributions at top rate: "
+          f"{overall:.1f}% (paper: 13.34%)")
+    return rows, agg
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -1,0 +1,55 @@
+"""Paper Figs. 6-7: TTFT across {5 distributions} x {3 request rates} x
+{vLLM, DPLB, SJFS, EDR, Gimbal}, plus the 3-seed repeat at the top rate."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (PAPER_RPS_LABELS, RPS_GRID, VARIANTS,
+                               ResultCache, emit)
+from repro.workloads.burstgpt import DISTRIBUTIONS
+
+
+def run(quick: bool = False, cache: ResultCache | None = None):
+    cache = cache or ResultCache()
+    rows = []
+    grid = [RPS_GRID[-1]] if quick else list(RPS_GRID)
+    labels = [PAPER_RPS_LABELS[-1]] if quick else list(PAPER_RPS_LABELS)
+    for rps, lbl in zip(grid, labels):
+        for dist in DISTRIBUTIONS:
+            base = cache.get("vllm", dist, rps, 0)["mean_ttft"]
+            for variant in VARIANTS:
+                r = cache.get(variant, dist, rps, 0)
+                rows.append({
+                    "figure": "fig6_ttft", "paper_rps": lbl, "dist": dist,
+                    "variant": variant, "mean_ttft_s": r["mean_ttft"],
+                    "p99_ttft_s": r["p99_ttft"],
+                    "vs_vllm_pct": 100.0 * (base - r["mean_ttft"]) / base,
+                })
+    # Fig. 7: three seeds at the top rate, gimbal vs vllm per distribution
+    seeds = (0,) if quick else (0, 1, 2)
+    agg = []
+    for dist in DISTRIBUTIONS:
+        means = {}
+        for variant in ("vllm", "gimbal"):
+            vals = [cache.get(variant, dist, RPS_GRID[-1], s)["mean_ttft"]
+                    for s in seeds]
+            means[variant] = sum(vals) / len(vals)
+        agg.append({"figure": "fig7_ttft_3seed", "dist": dist,
+                    "vllm_ttft_s": means["vllm"], "gimbal_ttft_s": means["gimbal"],
+                    "reduction_pct": 100.0 * (means["vllm"] - means["gimbal"])
+                    / means["vllm"]})
+    overall = sum(a["reduction_pct"] for a in agg) / len(agg)
+    agg.append({"figure": "fig7_ttft_3seed", "dist": "ALL",
+                "vllm_ttft_s": float("nan"), "gimbal_ttft_s": float("nan"),
+                "reduction_pct": overall})
+    emit(rows, "bench_ttft")
+    emit(agg, "bench_ttft_3seed")
+    print(f"# TTFT mean reduction across distributions at top rate: "
+          f"{overall:.1f}% (paper: 17.76%)")
+    return rows, agg
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

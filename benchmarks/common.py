@@ -1,0 +1,78 @@
+"""Shared benchmark plumbing: experiment grid, CSV emission, result cache."""
+from __future__ import annotations
+
+import copy
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.sim.simulator import SimResult, simulate
+from repro.workloads.burstgpt import burstgpt_trace
+
+ART = Path(__file__).resolve().parent / "artifacts"
+ART.mkdir(exist_ok=True)
+
+# The paper's operating points (1.0 / 1.2 / 1.4 RPS on 2xA100) mapped onto the
+# cost model at equal utilization: the top rate is calibrated so the vLLM
+# baseline sits in the paper's saturation regime (P99 TTFT of seconds, ~35x
+# the mean — §V-A.2 reports P99 4.9 s).  Ratios match the paper's sweep.
+RPS_GRID = (7.14, 8.57, 10.0)
+PAPER_RPS_LABELS = ("1.0", "1.2", "1.4")
+N_REQUESTS = 400
+KV_POOL = 60_000
+BURSTINESS = 4.0
+MODEL = "qwen3-30b-a3b"
+VARIANTS = ("vllm", "dplb", "sjfs", "edr", "gimbal")
+
+
+def run_sim(variant: str, distribution: str, rps: float, seed: int,
+            n: int = N_REQUESTS, model: str = MODEL) -> SimResult:
+    trace = burstgpt_trace(n=n, distribution=distribution, rps=rps, seed=seed,
+                           burstiness=BURSTINESS)
+    return simulate([copy.copy(r) for r in trace], variant, get_config(model),
+                    n_engines=2, hw="a100", kv_pool_tokens=KV_POOL, seed=seed)
+
+
+class ResultCache:
+    """Sims are deterministic in (variant, dist, rps, seed, n); cache across
+    the per-figure benchmarks so run.py doesn't re-simulate."""
+
+    def __init__(self, path: Path = ART / "sim_cache.json"):
+        self.path = path
+        self._mem: Dict[str, dict] = {}
+        if path.exists():
+            self._mem = json.loads(path.read_text())
+
+    def get(self, variant, dist, rps, seed, n=N_REQUESTS) -> dict:
+        key = f"{variant}|{dist}|{rps}|{seed}|{n}|{MODEL}"
+        if key not in self._mem:
+            t0 = time.time()
+            res = run_sim(variant, dist, rps, seed, n)
+            r = res.report
+            self._mem[key] = {
+                "mean_ttft": r.mean_ttft, "p50_ttft": r.p50_ttft,
+                "p99_ttft": r.p99_ttft, "mean_tpot": r.mean_tpot,
+                "p99_tpot": r.p99_tpot,
+                "throughput_tok_s": r.throughput_tok_s,
+                "throughput_req_s": r.throughput_req_s,
+                "n": r.n, "migrations": res.migrations,
+                "moe_mult": res.moe_mult_final,
+                "cross_frac": res.cross_frac_final,
+                "wall_s": time.time() - t0,
+            }
+            self.path.write_text(json.dumps(self._mem, indent=0))
+        return self._mem[key]
+
+
+def emit(rows: List[dict], name: str) -> None:
+    """Print CSV + persist JSON artifact."""
+    if not rows:
+        return
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+    (ART / f"{name}.json").write_text(json.dumps(rows, indent=1))

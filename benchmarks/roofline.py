@@ -1,0 +1,142 @@
+"""§Roofline aggregation: merge dry-run artifacts into the per-(arch x cell)
+three-term roofline table.
+
+Sources (produced by repro.launch.dryrun --all):
+  * <arch>__<cell>__16x16.json          rolled, full depth: compile proof +
+                                        memory_analysis (bytes-per-device)
+  * <arch>__<cell>__2x16x16.json        multi-pod compile proof
+  * <arch>__<cell>__16x16__depth{a,b}   fully-unrolled reduced-depth probes:
+                                        exact per-layer HLO flops / bytes /
+                                        collective wire bytes
+
+Per-step cost is affine in depth, so full-depth cost = linear extrapolation
+of the two probes (the rolled artifact can't be used directly: XLA's
+HloCostAnalysis counts a while-loop body once, independent of trip count).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ASSIGNED_ARCHS, depth_pair, dryrun_cells, get_config
+from repro.models.config import SHAPE_CELLS, cell_applicable
+from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def _load(name: str):
+    p = ART / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def extrapolate(arch: str, cell: str, suffix: str = "") -> dict | None:
+    cfg = get_config(arch)
+    d1, d2 = depth_pair(cfg)
+    a = _load(f"{arch}__{cell}__16x16__depth{d1}{suffix}")
+    b = _load(f"{arch}__{cell}__16x16__depth{d2}{suffix}")
+    if a is None or b is None:
+        return None
+    full = cfg.num_layers
+
+    def ext(key, sub=None):
+        va = a[key] if sub is None else a[key][sub]
+        vb = b[key] if sub is None else b[key][sub]
+        return va + (vb - va) * (full - d1) / (d2 - d1)
+
+    flops = ext("hlo_flops_per_dev")
+    byts = ext("hlo_bytes_per_dev")
+    coll = ext("collective_bytes_per_dev")
+    return {"flops_per_dev": flops, "bytes_per_dev": byts,
+            "coll_bytes_per_dev": coll, "depths": (d1, d2)}
+
+
+def analyse(suffix: str = "") -> list:
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for cell in SHAPE_CELLS:
+            ok, why = cell_applicable(cfg, cell)
+            if not ok:
+                rows.append({"arch": arch, "cell": cell.name, "status": "SKIP",
+                             "note": why})
+                continue
+            rolled = _load(f"{arch}__{cell.name}__16x16{suffix}")
+            mp = _load(f"{arch}__{cell.name}__2x16x16{suffix}")
+            ex = extrapolate(arch, cell.name, suffix)
+            if rolled is None:
+                rows.append({"arch": arch, "cell": cell.name,
+                             "status": "MISSING", "note": "no rolled artifact"})
+                continue
+            n_dev = rolled["n_devices"]
+            if ex is None:
+                flops, byts, coll = (rolled["hlo_flops_per_dev"],
+                                     rolled["hlo_bytes_per_dev"],
+                                     rolled["collective_bytes_per_dev"])
+                note = "loop-body-once costs (no depth probes)"
+            else:
+                flops, byts, coll = (ex["flops_per_dev"], ex["bytes_per_dev"],
+                                     ex["coll_bytes_per_dev"])
+                note = f"extrapolated from depths {ex['depths']}"
+            terms = {"compute_s": flops / PEAK_FLOPS,
+                     "memory_s": byts / HBM_BW,
+                     "collective_s": coll / LINK_BW}
+            dominant = max(terms, key=terms.get)
+            mf = rolled["model_flops_global"]
+            step_s = max(terms.values())
+            # roofline fraction: useful model FLOPs achieved vs chips running
+            # at peak for the (bound-term) step time
+            frac = mf / (n_dev * PEAK_FLOPS * step_s) if step_s > 0 else 0.0
+            rows.append({
+                "arch": arch, "cell": cell.name, "status": "OK",
+                "mesh_ok_single": True, "mesh_ok_multi": mp is not None,
+                "compute_s": terms["compute_s"], "memory_s": terms["memory_s"],
+                "collective_s": terms["collective_s"], "dominant": dominant,
+                "model_flops": mf,
+                "useful_ratio": mf / max(flops * n_dev, 1.0),
+                "roofline_frac": frac,
+                "mem_per_dev_gb": (rolled["memory_analysis"].get("temp_size_in_bytes", 0)
+                                   + rolled["memory_analysis"].get("argument_size_in_bytes", 0)) / 2**30,
+                "note": note,
+            })
+    return rows
+
+
+def to_markdown(rows: list) -> str:
+    out = ["| arch | cell | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful | roofline | mem/dev (GB) | multi-pod |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['cell']} | — | — | — | "
+                       f"{r['status']}: {r['note']} | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s','')} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_frac']:.3f} | {r['mem_per_dev_gb']:.2f} | "
+            f"{'yes' if r['mesh_ok_multi'] else 'PENDING'} |")
+    return "\n".join(out)
+
+
+def run(quick: bool = False, cache=None, suffix: str = ""):
+    rows = analyse(suffix)
+    ok = [r for r in rows if r["status"] == "OK"]
+    print(to_markdown(rows))
+    (ART.parent / f"roofline{suffix or ''}.json").write_text(json.dumps(rows, indent=1))
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_frac"])
+        coll = max(ok, key=lambda r: r["collective_s"] / max(r["compute_s"] + r["memory_s"], 1e-12))
+        print(f"# {len(ok)} cells analysed; worst roofline fraction: "
+              f"{worst['arch']}/{worst['cell']} ({worst['roofline_frac']:.3f}); "
+              f"most collective-bound: {coll['arch']}/{coll['cell']}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suffix", default="")
+    args = ap.parse_args()
+    run(suffix=args.suffix)

@@ -1,0 +1,41 @@
+"""Run every benchmark (one per paper table/figure) and print consolidated
+CSV.  ``python -m benchmarks.run [--quick]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single rate / fewer seeds (CI mode)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_expert_balance, bench_kernels, bench_prefix,
+                            bench_throughput, bench_tpot, bench_ttft, roofline)
+    from benchmarks.common import ResultCache
+
+    cache = ResultCache()
+    suites = [
+        ("bench_ttft (Figs. 6-7)", bench_ttft),
+        ("bench_tpot (Figs. 8-9)", bench_tpot),
+        ("bench_throughput (Fig. 10)", bench_throughput),
+        ("bench_prefix (Figs. 11-12)", bench_prefix),
+        ("bench_expert_balance (Figs. 3-4)", bench_expert_balance),
+        ("bench_kernels (infra)", bench_kernels),
+        ("roofline (SS Roofline, from dry-run artifacts)", roofline),
+    ]
+    t_all = time.time()
+    for name, mod in suites:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        mod.run(quick=args.quick, cache=cache)
+        print(f"# [{name}] {time.time()-t0:.1f}s")
+    print(f"\n# all benchmarks done in {time.time()-t_all:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+"""repro: Gimbal-JAX — multi-layer scheduling for MoE LLM serving on TPU.
+
+Reproduction + beyond-paper optimization of "Multi-Layer Scheduling for
+MoE-Based LLM Reasoning" (CS.DC 2026).
+"""
+__version__ = "0.1.0"

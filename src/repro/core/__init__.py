@@ -1,0 +1,22 @@
+from repro.core.types import EngineMetrics, GimbalConfig, Request
+from repro.core.router import GimbalRouter, RoundRobinRouter
+from repro.core.sjf import SJFQueue, fcfs_order, sjf_order
+from repro.core.affinity import AffinityTracker, accumulate_stats, synthetic_stats
+from repro.core.placement import (assignment_to_perm, comm_cut, eplb_placement,
+                                  gimbal_placement, migration_cost, milp_exact,
+                                  objective, perm_to_assignment, row_imbalance,
+                                  static_placement)
+from repro.core.eplb import ExpertRebalancer, RebalanceEvent
+from repro.core.gimbal import VARIANTS, make_queue, make_rebalancer, make_router, variant_flags
+
+__all__ = [
+    "EngineMetrics", "GimbalConfig", "Request",
+    "GimbalRouter", "RoundRobinRouter",
+    "SJFQueue", "fcfs_order", "sjf_order",
+    "AffinityTracker", "accumulate_stats", "synthetic_stats",
+    "assignment_to_perm", "comm_cut", "eplb_placement", "gimbal_placement",
+    "migration_cost", "milp_exact", "objective", "perm_to_assignment",
+    "row_imbalance", "static_placement",
+    "ExpertRebalancer", "RebalanceEvent",
+    "VARIANTS", "make_queue", "make_rebalancer", "make_router", "variant_flags",
+]

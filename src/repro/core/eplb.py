@@ -1,0 +1,106 @@
+"""Expert Dynamic Replacement controller (paper Algorithm 3 driver loop).
+
+Owns the AffinityTracker, re-evaluates placement every tau engine steps, and
+physically relocates the stacked expert weights (models.moe.permute_expert_weights).
+The anchor device index is fixed at startup (paper: "manually specified before
+system startup"), so affinity-linked experts never migrate repeatedly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.affinity import AffinityTracker
+from repro.core.placement import (eplb_placement, gimbal_placement, migration_cost,
+                                  perm_to_assignment, static_placement)
+from repro.core.types import GimbalConfig
+from repro.models.config import ModelConfig
+from repro.models.moe import ExpertPlacement
+
+
+@dataclasses.dataclass
+class RebalanceEvent:
+    step: int
+    moved_experts: int
+    bytes_moved: int
+    imbalance_before: float
+    imbalance_after: float
+    cut_before: float
+    cut_after: float
+
+
+class ExpertRebalancer:
+    """policy: 'static' (vLLM default) | 'eplb' (count-only) | 'gimbal' (Alg. 3)."""
+
+    def __init__(self, model_cfg: ModelConfig, num_devices: int,
+                 policy: str = "gimbal", anchor: int = 0,
+                 cfg: Optional[GimbalConfig] = None, top_e: int = 16,
+                 stats_decay: float = 0.8):
+        assert policy in ("static", "eplb", "gimbal")
+        self.model_cfg = model_cfg
+        self.g = num_devices
+        self.policy = policy
+        self.anchor = anchor
+        self.cfg = cfg or GimbalConfig()
+        self.top_e = top_e
+        e = model_cfg.num_experts
+        n_moe = sum(model_cfg.layer_is_moe(i) for i in range(model_cfg.num_layers))
+        self.tracker = AffinityTracker(max(n_moe, 1), e, decay=stats_decay)
+        self.perm = static_placement(e, num_devices)
+        self.step = 0
+        self.events: List[RebalanceEvent] = []
+
+    # --- hot path -----------------------------------------------------------------
+    def observe(self, expert_ids) -> None:
+        """Feed per-layer logical expert ids (L, B, S, K) from moe stats."""
+        self.tracker.update(expert_ids)
+
+    def tick(self) -> Optional[np.ndarray]:
+        """Advance one engine step; returns a NEW perm when a relocation fires
+        (Alg. 3 lines 6-9: every tau steps), else None."""
+        self.step += 1
+        if self.policy == "static" or self.step % self.cfg.tau != 0:
+            return None
+        return self.rebalance()
+
+    def rebalance(self) -> np.ndarray:
+        A, W = self.tracker.A, self.tracker.W
+        if A.sum() == 0:
+            return self.perm
+        from repro.core import placement as P
+        old_assign = perm_to_assignment(self.perm, self.g)
+        imb_before = P.row_imbalance(A, old_assign, self.g)
+        cut_before = P.comm_cut(W, old_assign)
+        if self.policy == "eplb":
+            new_perm = eplb_placement(A, self.g)
+        else:
+            new_perm = gimbal_placement(A, W, self.g, anchor=self.anchor,
+                                        top_e=self.top_e)
+        new_assign = perm_to_assignment(new_perm, self.g)
+        moved, nbytes = migration_cost(self.perm, new_perm, self.g,
+                                       self.bytes_per_expert())
+        self.events.append(RebalanceEvent(
+            step=self.step, moved_experts=moved, bytes_moved=nbytes,
+            imbalance_before=imb_before,
+            imbalance_after=P.row_imbalance(A, new_assign, self.g),
+            cut_before=cut_before,
+            cut_after=P.comm_cut(W, new_assign)))
+        self.perm = new_perm
+        return new_perm
+
+    def bytes_per_expert(self) -> int:
+        c = self.model_cfg
+        n_moe = sum(c.layer_is_moe(i) for i in range(c.num_layers))
+        per_layer = 3 * c.d_model * c.moe_d_ff * np.dtype(c.dtype).itemsize
+        return int(per_layer * n_moe)
+
+    # --- placement consumed by the model ---------------------------------------------
+    def placement(self) -> ExpertPlacement:
+        return ExpertPlacement.from_perm(self.perm)
+
+    def placement_stack(self, n_scanned_layers: int) -> np.ndarray:
+        """(L, E) perm broadcast over layers — the paper's single global
+        partition applied at every MoE layer."""
+        return np.broadcast_to(self.perm, (n_scanned_layers, len(self.perm))).copy()

@@ -1,0 +1,53 @@
+"""Gimbal facade: wires the three scheduling levels together and exposes the
+ablation variants used in the paper's evaluation (§V-A.7).
+
+  * "vllm"   — RR router + FCFS queue + static experts   (baseline)
+  * "dplb"   — Alg.1 router only
+  * "sjfs"   — SJF queue only
+  * "edr"    — expert dynamic replacement only
+  * "gimbal" — all three
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+from repro.core.eplb import ExpertRebalancer
+from repro.core.router import GimbalRouter, RoundRobinRouter
+from repro.core.sjf import SJFQueue
+from repro.core.types import GimbalConfig
+from repro.models.config import ModelConfig
+
+VARIANTS = ("vllm", "dplb", "sjfs", "edr", "gimbal")
+
+
+def variant_flags(variant: str) -> Dict[str, bool]:
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
+    return {
+        "dplb": variant in ("dplb", "gimbal"),
+        "sjf": variant in ("sjfs", "gimbal"),
+        "edr": variant in ("edr", "gimbal"),
+    }
+
+
+def make_router(variant: str, engine_ids: Sequence[int],
+                cfg: Optional[GimbalConfig] = None):
+    f = variant_flags(variant)
+    cls = GimbalRouter if f["dplb"] else RoundRobinRouter
+    return cls(engine_ids, cfg or GimbalConfig())
+
+
+def make_queue(variant: str, cfg: Optional[GimbalConfig] = None) -> SJFQueue:
+    f = variant_flags(variant)
+    return SJFQueue(cfg or GimbalConfig(), policy="sjf" if f["sjf"] else "fcfs")
+
+
+def make_rebalancer(variant: str, model_cfg: ModelConfig, num_devices: int,
+                    cfg: Optional[GimbalConfig] = None, anchor: int = 0
+                    ) -> Optional[ExpertRebalancer]:
+    if not model_cfg.is_moe:
+        return None  # expert level inapplicable (see DESIGN.md §Arch-applicability)
+    f = variant_flags(variant)
+    policy = "gimbal" if f["edr"] else "static"
+    return ExpertRebalancer(model_cfg, num_devices, policy=policy, anchor=anchor,
+                            cfg=cfg or GimbalConfig())

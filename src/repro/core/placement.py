@@ -1,0 +1,225 @@
+"""Expert-level scheduling: placement algorithms (paper §III-D).
+
+Three placement policies:
+  * static_placement       — expert j on device j // (E/g)   (vLLM default EP)
+  * eplb_placement         — activation-count greedy balance (conventional EPLB,
+                             DeepSeek-style; the paper's ported baseline)
+  * gimbal_placement       — Algorithm 3: affinity pairs pinned to the anchor
+                             device, remaining experts greedy least-loaded
+
+plus the exact MILP objective (Eq. 3-12) evaluated by brute force at toy scale
+as a test oracle (`milp_exact`), and helpers computing the two objective terms
+(row-wise imbalance D, communication cut) for any assignment.
+
+An *assignment* maps logical expert -> device p in [0, g).  A *perm* maps
+logical expert -> physical slot s in [0, E) with device(s) = s // (E/g); the
+model's MoE layer consumes perms (see models/moe.py).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------------
+# assignment <-> permutation plumbing
+# ---------------------------------------------------------------------------------
+
+def assignment_to_perm(assign: np.ndarray, g: int) -> np.ndarray:
+    """Pack experts of device p into slot range [p*E/g, (p+1)*E/g).
+    Experts keep relative id order inside a device for determinism."""
+    e = len(assign)
+    cap = e // g
+    perm = np.empty(e, np.int32)
+    fill = [0] * g
+    for j in range(e):
+        p = int(assign[j])
+        perm[j] = p * cap + fill[p]
+        fill[p] += 1
+    assert all(f == cap for f in fill), f"unbalanced assignment {fill}"
+    return perm
+
+
+def perm_to_assignment(perm: np.ndarray, g: int) -> np.ndarray:
+    e = len(perm)
+    return (np.asarray(perm) // (e // g)).astype(np.int32)
+
+
+def static_placement(num_experts: int, g: int) -> np.ndarray:
+    """vLLM default: contiguous blocks, no load awareness."""
+    return assignment_to_perm(np.arange(num_experts) // (num_experts // g), g)
+
+
+# ---------------------------------------------------------------------------------
+# objective terms (Eq. 5-11)
+# ---------------------------------------------------------------------------------
+
+def row_imbalance(A: np.ndarray, assign: np.ndarray, g: int) -> float:
+    """D = max_{i,p} |L_{i,p} - L_i|  (Eq. 8-9 tight bound)."""
+    n, m = A.shape
+    onehot = np.eye(g)[assign]                   # (m, g)
+    loads = A @ onehot                           # (n, g)  L_{i,p}
+    ideal = A.sum(1, keepdims=True) / g          # (n, 1)  L_i
+    return float(np.abs(loads - ideal).max())
+
+
+def comm_cut(W: np.ndarray, assign: np.ndarray) -> float:
+    """Cut = sum_{j<k} (W_jk + W_kj) * [assign_j != assign_k]  (Eq. 11).
+    The paper sums j<k over the symmetrized weight."""
+    sym = W + W.T
+    diff = assign[:, None] != assign[None, :]
+    return float((sym * diff).sum() / 2.0)
+
+
+def objective(A: np.ndarray, W: np.ndarray, assign: np.ndarray, g: int,
+              alpha: float = 1.0, beta: float = 1.0) -> float:
+    """Eq. 12: alpha * D + beta * Cut."""
+    return alpha * row_imbalance(A, assign, g) + beta * comm_cut(W, assign)
+
+
+# ---------------------------------------------------------------------------------
+# conventional EPLB baseline (activation counts only)
+# ---------------------------------------------------------------------------------
+
+def eplb_placement(A: np.ndarray, g: int) -> np.ndarray:
+    """Greedy least-loaded by total activation, capacity m/g per device."""
+    m = A.shape[1]
+    cap = m // g
+    tot = A.sum(0)
+    order = np.argsort(tot)[::-1]
+    load = np.zeros(g)
+    count = np.zeros(g, int)
+    assign = np.empty(m, np.int32)
+    for j in order:
+        open_p = [p for p in range(g) if count[p] < cap]
+        p = min(open_p, key=lambda q: load[q])
+        assign[j] = p
+        load[p] += tot[j]
+        count[p] += 1
+    return assignment_to_perm(assign, g)
+
+
+# ---------------------------------------------------------------------------------
+# Algorithm 3: Gimbal's affinity-anchored greedy placement
+# ---------------------------------------------------------------------------------
+
+def gimbal_placement(A: np.ndarray, W: np.ndarray, g: int, anchor: int = 0,
+                     top_e: int = 16, min_weight: float = 0.0,
+                     pairs: Optional[Sequence[Tuple[int, int]]] = None
+                     ) -> np.ndarray:
+    """Algorithm 3 (EXP-RELOCATION):
+
+    line 2 — *Affinity placement*: every expert appearing in the affinity
+      matrix M (the top-E strongest W entries, or caller-provided `pairs`)
+      goes to the anchor device `anchor`.  If they exceed anchor capacity,
+      M is tightened (strongest pairs first) until they fit — the paper's
+      "tightening the statistical threshold / reducing top-E" rule.
+    line 3 — *Greedy balancing*: remaining experts assigned to devices 0..g-1
+      by descending activation with a least-loaded policy, respecting the
+      m/g capacity constraint (Eq. 4).
+    """
+    n, m = A.shape
+    cap = m // g
+    assert m % g == 0, "num experts must divide device count"
+
+    # --- build M: strongest inter-layer pairs ------------------------------------
+    if pairs is None:
+        w = W.copy().astype(float)
+        np.fill_diagonal(w, 0.0)
+        order = np.argsort(w.reshape(-1))[::-1]
+        pairs = []
+        for idx in order[: max(top_e, 0)]:
+            val = w.reshape(-1)[idx]
+            if val <= min_weight:
+                break
+            j, k = divmod(int(idx), m)
+            pairs.append((j, k))
+
+    anchored: List[int] = []
+    seen = set()
+    for j, k in pairs:                 # strongest first; tighten to fit capacity
+        for x in (j, k):
+            if x not in seen and len(anchored) < cap:
+                seen.add(x)
+                anchored.append(x)
+        if len(anchored) >= cap:
+            break
+
+    assign = np.full(m, -1, np.int32)
+    load = np.zeros(g)
+    count = np.zeros(g, int)
+    for x in anchored:                                     # line 2
+        assign[x] = anchor
+        load[anchor] += A.sum(0)[x]
+        count[anchor] += 1
+
+    tot = A.sum(0)
+    rest = [j for j in range(m) if assign[j] < 0]
+    for j in sorted(rest, key=lambda x: -tot[x]):          # line 3
+        open_p = [p for p in range(g) if count[p] < cap]
+        p = min(open_p, key=lambda q: load[q])
+        assign[j] = p
+        load[p] += tot[j]
+        count[p] += 1
+    return assignment_to_perm(assign, g)
+
+
+# ---------------------------------------------------------------------------------
+# exact MILP oracle (toy scale) — Eq. 3-12 by exhaustive balanced partitioning
+# ---------------------------------------------------------------------------------
+
+def _balanced_partitions(m: int, g: int):
+    """Yield every assignment of m items into g groups of exactly m/g,
+    with group-symmetry broken (item 0 always in group 0)."""
+    cap = m // g
+
+    def rec(remaining: List[int], assign: np.ndarray, p: int):
+        if p == g - 1:
+            for j in remaining:
+                assign[j] = p
+            yield assign.copy()
+            for j in remaining:
+                assign[j] = -1
+            return
+        pool = remaining
+        anchor_item = pool[0]  # symmetry break: lowest remaining id pins this group
+        for combo in itertools.combinations(pool[1:], cap - 1):
+            chosen = (anchor_item,) + combo
+            for j in chosen:
+                assign[j] = p
+            rest = [j for j in pool if j not in chosen]
+            yield from rec(rest, assign, p + 1)
+            for j in chosen:
+                assign[j] = -1
+
+    yield from rec(list(range(m)), np.full(m, -1, np.int32), 0)
+
+
+def milp_exact(A: np.ndarray, W: np.ndarray, g: int, alpha: float = 1.0,
+               beta: float = 1.0, max_items: int = 12
+               ) -> Tuple[np.ndarray, float]:
+    """Exhaustive optimum of Eq. 12 under Eq. 3-4.  Only for m <= max_items."""
+    n, m = A.shape
+    if m > max_items:
+        raise ValueError(f"milp_exact is a toy oracle; m={m} > {max_items}")
+    best, best_val = None, np.inf
+    for assign in _balanced_partitions(m, g):
+        val = objective(A, W, assign, g, alpha, beta)
+        if val < best_val:
+            best, best_val = assign.copy(), val
+    return best, float(best_val)
+
+
+# ---------------------------------------------------------------------------------
+# migration accounting (for the simulator + EXPERIMENTS)
+# ---------------------------------------------------------------------------------
+
+def migration_cost(old_perm: np.ndarray, new_perm: np.ndarray, g: int,
+                   bytes_per_expert: int) -> Tuple[int, int]:
+    """(num experts that changed device, bytes moved across the interconnect)."""
+    old_dev = perm_to_assignment(old_perm, g)
+    new_dev = perm_to_assignment(new_perm, g)
+    moved = int((old_dev != new_dev).sum())
+    return moved, moved * bytes_per_expert

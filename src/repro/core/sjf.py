@@ -1,0 +1,92 @@
+"""Request-level scheduling: SJF with aging (paper Algorithm 2) + FCFS baseline.
+
+Priority key is the PREFILL token count (r.prompt) — the paper deliberately
+avoids output-length prediction.  Requests waiting longer than theta_age are
+promoted to high priority regardless of size (starvation guard).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core.types import GimbalConfig, Request
+
+
+def fcfs_order(waiting: Sequence[Request], now: float) -> List[Request]:
+    """vLLM default: arrival order."""
+    return sorted(waiting, key=lambda r: (r.arrival_time, r.req_id))
+
+
+def sjf_order(waiting: Sequence[Request], now: float,
+              cfg: GimbalConfig | None = None) -> List[Request]:
+    """Algorithm 2: assign priorities, sort ascending, return the new queue.
+
+    Aged requests (w_r >= theta_age) get priority -1 ("high"); ties among aged
+    requests break by arrival (oldest first).  Everyone else is keyed on
+    prompt length; ties break by arrival then id for determinism.
+    """
+    cfg = cfg or GimbalConfig()
+    out = []
+    for r in waiting:                                   # lines 1-8
+        w_r = now - r.arrival_time                      # line 2
+        if w_r >= cfg.theta_age:                        # line 3
+            r.priority = -1.0                           # line 4: high priority
+            r.aged = True
+        else:
+            r.priority = float(r.prompt_len)            # line 6
+            r.aged = False
+        out.append(r)
+    # line 9: sort by priority ascending (aged first, then shortest prefill)
+    return sorted(out, key=lambda r: (r.priority, r.arrival_time, r.req_id))
+
+
+class SJFQueue:
+    """Mutable waiting queue wrapper used by the engine: push requests, pop the
+    next batch in SJF(+aging) or FCFS order before each forward pass."""
+
+    def __init__(self, cfg: GimbalConfig | None = None, policy: str = "sjf"):
+        assert policy in ("sjf", "fcfs")
+        self.cfg = cfg or GimbalConfig()
+        self.policy = policy
+        self._items: List[Request] = []
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    @property
+    def waiting_tokens(self) -> int:
+        return sum(r.prompt_len for r in self._items)
+
+    def push(self, r: Request) -> None:
+        self._items.append(r)
+
+    def extend(self, rs: Sequence[Request]) -> None:
+        self._items.extend(rs)
+
+    def reorder(self, now: float) -> List[Request]:
+        if self.policy == "sjf":
+            self._items = sjf_order(self._items, now, self.cfg)
+        else:
+            self._items = fcfs_order(self._items, now)
+        return list(self._items)
+
+    def pop_next(self, now: float, budget_tokens: int | None = None) -> List[Request]:
+        """Reorder, then pop requests fitting a prefill token budget (chunked-
+        prefill-style admission).  budget_tokens=None pops just the head."""
+        self.reorder(now)
+        popped: List[Request] = []
+        if budget_tokens is None:
+            if self._items:
+                popped.append(self._items.pop(0))
+            return popped
+        used = 0
+        while self._items and used + self._items[0].prompt_len <= budget_tokens:
+            r = self._items.pop(0)
+            used += r.prompt_len
+            popped.append(r)
+        if not popped and self._items and used == 0:
+            popped.append(self._items.pop(0))  # head bigger than budget: admit alone
+        return popped
+
+    def drain(self) -> List[Request]:
+        items, self._items = self._items, []
+        return items

@@ -1,0 +1,75 @@
+"""Shared datatypes for the Gimbal scheduling stack."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Request:
+    """A serving request as seen by every scheduling level."""
+    req_id: int
+    prompt_len: int                  # prefill token count == Alg.2's priority key
+    max_new_tokens: int
+    arrival_time: float
+    user_id: Optional[str] = None    # enables Alg.1 user affinity
+    prompt_tokens: Optional[object] = None  # actual tokens (functional plane only)
+
+    # lifecycle (filled in by the engine / simulator)
+    engine_id: Optional[int] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    generated: int = 0
+    priority: float = 0.0
+    aged: bool = False
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean per-output-token latency excluding the first token (paper metric)."""
+        if self.finish_time is None or self.first_token_time is None or self.generated <= 1:
+            return None
+        return (self.finish_time - self.first_token_time) / (self.generated - 1)
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Per-engine metrics the DP load balancer consumes (Alg. 1 inputs).
+
+    Delivered asynchronously in the paper (ZeroMQ) — carries a timestamp so
+    the balancer can model staleness; `available` mirrors Alg. 1 line 2.
+    """
+    engine_id: int
+    kv_usage: float = 0.0            # fraction of KV capacity in use, in [0,1]
+    running_load: int = 0            # running + waiting TOKENS (not request count)
+    num_running: int = 0
+    num_waiting: int = 0
+    timestamp: float = 0.0
+    healthy: bool = True
+
+    @property
+    def available(self) -> bool:
+        return self.healthy
+
+
+@dataclasses.dataclass(frozen=True)
+class GimbalConfig:
+    """All paper thresholds, with the paper's §V.A.2 defaults."""
+    theta_kv: float = 0.90           # KV saturation threshold
+    theta_diff: float = 0.10         # cross-engine KV imbalance tolerance
+    theta_load: int = 3000           # running-load gap (tokens) ~ one large BurstGPT request
+    theta_age: float = 5.0           # seconds; < P99 TTFT under 1.4 RPS load
+    tau: int = 3000                  # expert replacement period (steps)
+    affinity_ttl: float = 300.0      # user->engine mapping expiry (seconds)
+    metric_staleness: float = 1.0    # metrics older than this count as unavailable
+    # module switches (the paper's ablations: DPLB / SJFS / EDR / Gimbal)
+    enable_dplb: bool = True
+    enable_sjf: bool = True
+    enable_edr: bool = True
+    # straggler mitigation (beyond-paper, required for 1000+ node runs)
+    hedge_threshold: float = 0.0     # >0: re-dispatch if queued longer than this

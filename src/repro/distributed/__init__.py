@@ -1,0 +1,6 @@
+from repro.distributed.context import ShardCtx, current_ctx, divides, shard_ctx
+from repro.distributed.sharding import (cache_specs, input_shardings, named,
+                                        param_specs)
+
+__all__ = ["ShardCtx", "current_ctx", "divides", "shard_ctx",
+           "cache_specs", "input_shardings", "named", "param_specs"]

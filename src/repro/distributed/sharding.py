@@ -1,0 +1,233 @@
+"""PartitionSpecs for every parameter / cache / input tree, per family.
+
+Strategy (DESIGN.md §5):
+  * model axis ("model", 16)   — tensor parallelism: attention heads (or
+    head_dim when heads don't divide), FFN hidden, MoE experts (EP), vocab.
+  * data axes ("pod","data")   — batch; weights are additionally FSDP-sharded
+    over "data" on a large non-TP dim when divisible, which makes optimizer
+    state ZeRO-sharded for free.
+  * decode KV caches           — sequence dim sharded over "model"
+    (seq-parallel flash-decode; uniform across archs incl. MQA kv=1).
+
+Specs are derived path-based from the abstract parameter tree so they always
+match init_params' structure; leading stack dims (scan / hybrid double-stack)
+are padded with None automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.context import ShardCtx, divides
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeCell
+
+
+def _ax(n: int, size: int, name: str) -> Optional[str]:
+    """Axis name if the dim divides over it, else None (replicate)."""
+    return name if divides(n, size) else None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"[{e.idx}]")
+    return tuple(names)
+
+
+def _base_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, ctx: ShardCtx) -> Tuple[P, int]:
+    """(spec for the UNSTACKED leaf, base ndim).  Caller pads leading dims."""
+    m, dp = ctx.tp, int(ctx.mesh.shape["data"])
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    t = shape  # trailing dims equal base shape
+
+    # ---- norms / scalars ------------------------------------------------------
+    if leaf in ("scale", "kv_norm", "q_norm", "conv_b", "A_log", "D", "dt_bias",
+                "norm"):
+        if leaf in ("A_log", "D", "dt_bias"):            # (h,)
+            return P(_ax(t[-1], m, "model")), 1
+        if leaf == "norm" and parent == "mamba":         # (di,)
+            return P(_ax(t[-1], m, "model")), 1
+        return P(None), 1
+
+    # ---- embeddings -----------------------------------------------------------
+    if leaf in ("embedding", "unembedding"):             # (V, d)
+        v, d = t[-2], t[-1]
+        if divides(v, m):
+            return P("model", _ax(d, dp, "data")), 2
+        return P(None, _ax(d, m, "model")), 2
+
+    # ---- attention ------------------------------------------------------------
+    if parent in ("attn", "cross", "shared_attn") or leaf.startswith(("wq", "wk", "wv", "wo", "bq", "bk", "bv", "wkv")):
+        if leaf in ("wq", "wk", "wv"):
+            if len(t) >= 3 and t[-3] == cfg.d_model:     # GQA (d, H, hd)
+                d, h, hd = t[-3], t[-2], t[-1]
+                if divides(h, m):
+                    return P(_ax(d, dp, "data"), "model", None), 3
+                if leaf == "wq" and divides(hd, m):
+                    return P(_ax(d, dp, "data"), None, "model"), 3
+                # kv heads below TP degree: replicate over model (Megatron
+                # GQA recipe; scores stay sharded on the expanded Q heads)
+                return P(_ax(d, dp, "data"), None, None), 3
+            # MLA wq (d, H, dn+dr)
+            d, h, hd = t[-3], t[-2], t[-1]
+            return P(_ax(d, dp, "data"), _ax(h, m, "model"), None), 3
+        if leaf == "wo":                                  # (H, hd, d)
+            h, hd, d = t[-3], t[-2], t[-1]
+            if divides(h, m):
+                return P("model", None, _ax(d, dp, "data")), 3
+            if divides(hd, m):
+                return P(None, "model", _ax(d, dp, "data")), 3
+            return P(None, None, _ax(d, m, "model")), 3
+        if leaf == "bq":                                  # (H, hd)
+            h, hd = t[-2], t[-1]
+            if divides(h, m):
+                return P("model", None), 2
+            if divides(hd, m):
+                return P(None, "model"), 2
+            return P(None, None), 2
+        if leaf in ("bk", "bv"):                          # follow replicated k/v
+            return P(None, None), 2
+        if leaf == "wkv_a":                               # (d, r+dr) — small
+            return P(_ax(t[-2], dp, "data"), None), 2
+        if leaf == "wkv_b":                               # (r, H, dn+dv)
+            return P(None, _ax(t[-2], m, "model"), None), 3
+        if leaf == "wq_a":                                # (d, rq)
+            return P(_ax(t[-2], dp, "data"), None), 2
+        if leaf == "wq_b":                                # (rq, H, dn+dr)
+            return P(None, _ax(t[-2], m, "model"), None), 3
+
+    # ---- MoE --------------------------------------------------------------------
+    if parent == "moe" or (parent == "shared" and len(names) >= 3 and names[-3] == "moe"):
+        if leaf == "w_router":                            # (d, E) — FSDP over data
+            return P(_ax(t[-2], dp, "data"), None), 2
+        if parent == "moe" and leaf in ("w_gate", "w_up"):  # (E, d, f)
+            e, d, f = t[-3], t[-2], t[-1]
+            return P(_ax(e, m, "model"), None, _ax(f, dp, "data")), 3
+        if parent == "moe" and leaf == "w_down":          # (E, f, d)
+            e, f, d = t[-3], t[-2], t[-1]
+            return P(_ax(e, m, "model"), _ax(f, dp, "data"), None), 3
+        # moe.shared.* — dense FFN rules below
+
+    # ---- dense FFN ---------------------------------------------------------------
+    if leaf in ("w_gate", "w_up"):                        # (d, f)
+        d, f = t[-2], t[-1]
+        return P(_ax(d, dp, "data"), _ax(f, m, "model")), 2
+    if leaf == "w_down":                                  # (f, d)
+        f, d = t[-2], t[-1]
+        return P(_ax(f, m, "model"), _ax(d, dp, "data")), 2
+
+    # ---- mamba2 -------------------------------------------------------------------
+    if parent == "mamba":
+        if leaf == "w_in":                                # (d, 2di+2n+h) — replicated
+            return P(_ax(t[-2], dp, "data"), None), 2     # over model: sliced outputs stay local
+        if leaf == "conv_w":                              # (K, C)
+            return P(None, None), 2
+        if leaf == "w_out":                               # (di, d)
+            return P(_ax(t[-2], m, "model"), _ax(t[-1], dp, "data")), 2
+
+    # default: replicate
+    return P(*([None] * len(shape))), len(shape)
+
+
+def param_specs(cfg: ModelConfig, ctx: ShardCtx) -> Any:
+    """PartitionSpec tree matching init_params(cfg)'s structure."""
+    abstract = M.abstract_params(cfg)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        spec, base_nd = _base_spec(names, leaf.shape, cfg, ctx)
+        pad = leaf.ndim - base_nd
+        if pad > 0:
+            spec = P(*([None] * pad), *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, abstract)
+
+
+# =============================================================================
+# caches
+# =============================================================================
+
+def cache_specs(cfg: ModelConfig, ctx: ShardCtx, batch: int,
+                max_seq: int = 8) -> Any:
+    """Spec tree matching init_cache(cfg, batch, max_seq).
+
+    Decode KV: seq over "model" (flash-decode seq parallelism) when max_seq
+    divides the TP degree; batch over the data axes when divisible, else
+    replicated (long_500k B=1).
+    """
+    bdim = 1
+    for a in ctx.batch_axes:
+        bdim *= int(ctx.mesh.shape[a])
+    b_ax = ctx.batch_axes if divides(batch, bdim) else None
+    m = ctx.model_axis
+
+    abstract = jax.eval_shape(lambda: M.init_cache(cfg, batch, max_seq))
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        leafname = names[-1]
+        nd = leaf.ndim
+        if leafname in ("k", "v"):
+            # ((stack dims...), B, S, H, D)
+            pad = nd - 4
+            s_ax = m if divides(leaf.shape[pad + 1], ctx.tp) else None
+            return P(*([None] * pad), b_ax, s_ax, None, None)
+        if leafname in ("ckv", "krope"):
+            # ((L,), B, S, R)
+            pad = nd - 3
+            s_ax = m if divides(leaf.shape[pad + 1], ctx.tp) else None
+            return P(*([None] * pad), b_ax, s_ax, None)
+        if leafname == "ssm":
+            # ((stack...), B, H, P, N)
+            pad = nd - 4
+            h = leaf.shape[pad + 1]
+            return P(*([None] * pad), b_ax, _ax(h, ctx.tp, m), None, None)
+        if leafname == "conv":
+            # ((stack...), B, K-1, C)
+            pad = nd - 3
+            return P(*([None] * pad), b_ax, None, None)
+        if leafname == "memory":
+            return P(b_ax, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract)
+
+
+# =============================================================================
+# inputs
+# =============================================================================
+
+def input_shardings(cfg: ModelConfig, ctx: ShardCtx, cell: ShapeCell,
+                    specs: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, P]:
+    bdim = 1
+    for a in ctx.batch_axes:
+        bdim *= int(ctx.mesh.shape[a])
+    b_ax = ctx.batch_axes if divides(cell.global_batch, bdim) else None
+    out: Dict[str, P] = {}
+    for name, sds in specs.items():
+        if name in ("tokens", "labels"):
+            if sds.ndim == 2 and sds.shape[1] > 1 and divides(sds.shape[1], ctx.tp) and cell.kind == "train":
+                out[name] = P(b_ax, None)   # seq kept whole; blocks re-shard internally
+            else:
+                out[name] = P(b_ax, None)
+        elif name == "cache_pos":
+            out[name] = P(b_ax)
+        elif name in ("vision_embeds", "frames"):
+            out[name] = P(b_ax, None, None)
+        else:
+            out[name] = P(*([None] * sds.ndim))
+    return out
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        spec_tree, is_leaf=lambda x: isinstance(x, P))

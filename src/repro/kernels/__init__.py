@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §6):
+grouped expert GEMM, flash-decode attention, fused top-k router.
+
+Each kernel ships a pure-jnp oracle in ref.py and a jit wrapper in ops.py;
+tests sweep shapes/dtypes with interpret=True.
+"""
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.moe_gemm import moe_gemm
+from repro.kernels.topk_router import topk_router
+from repro.kernels.ops import (decode_attention_pallas, expert_ffn_pallas,
+                               route_pallas)
+
+__all__ = ["flash_decode", "moe_gemm", "topk_router",
+           "decode_attention_pallas", "expert_ffn_pallas", "route_pallas"]

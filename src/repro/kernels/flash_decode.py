@@ -1,0 +1,98 @@
+"""Flash-decode: single-token attention with online softmax over KV blocks
+streamed HBM -> VMEM (DESIGN.md §6).
+
+Grid (B, Hkv, S/BS); the S axis is the sequential ("arbitrary") grid dim, so
+the (m, l, acc) running statistics live in VMEM scratch and are carried across
+KV blocks — the kernel analogue of the shard_map flash-decode combine in
+models/attention.py (which splits the same recurrence across chips).
+
+GQA-aware: the q block holds all G = Hq/Hkv query heads of one KV head, so
+each KV tile is read exactly once per group (the roofline-optimal layout:
+decode attention is KV-bandwidth-bound).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_s: int, softcap: float):
+    si = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                 # (G, D)
+    k = k_ref[0, :, 0, :]                           # (BS, D)
+    v = v_ref[0, :, 0, :]                           # (BS, D)
+    length = len_ref[0]
+
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T)  # (G, BS)
+    s = s * (q.shape[-1] ** -0.5)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    jpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(jpos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # (G, BS)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v.astype(jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "softcap", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
+                 *, block_s: int = 256, softcap: float = 0.0,
+                 interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); k, v: (B, S, Hkv, D); lengths: (B,).  -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bs = min(block_s, s)
+    sp = -(-s // bs) * bs
+    if sp != s:
+        k = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    qg = q.reshape(b, hkv, g, d)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=bs, softcap=softcap),
+        grid=(b, hkv, sp // bs),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, si: (bi,)),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, hi, si: (bi, si, hi, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, hi, si: (bi, si, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),         # m
+            pltpu.VMEM((g, 1), jnp.float32),         # l
+            pltpu.VMEM((g, d), jnp.float32),         # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,50 @@
+"""Public jit'd entry points for the kernel layer.
+
+`interpret` defaults to True off-TPU so the same call sites work in the CPU
+functional plane and compile to real Mosaic kernels on TPU.  expert_ffn_pallas
+is the drop-in replacement for models.moe._expert_ffn (gated FFN via three
+grouped GEMMs) used when the engine is configured with use_pallas=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.moe_gemm import moe_gemm
+from repro.kernels.topk_router import topk_router
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def auto_interpret(interpret=None) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def expert_ffn_pallas(params: dict, xe: jax.Array, interpret=None) -> jax.Array:
+    """(E, C, d) -> (E, C, d) gated FFN via grouped-GEMM kernels."""
+    it = auto_interpret(interpret)
+    gate = moe_gemm(xe, params["w_gate"], interpret=it)
+    up = moe_gemm(xe, params["w_up"], interpret=it)
+    act = (jax.nn.silu(gate.astype(jnp.float32)).astype(xe.dtype) * up)
+    return moe_gemm(act, params["w_down"], interpret=it)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: jax.Array, softcap: float = 0.0,
+                            interpret=None) -> jax.Array:
+    """(B, Hq, D) x (B, S, Hkv, D) -> (B, Hq, D)."""
+    return flash_decode(q, k, v, lengths, softcap=softcap,
+                        interpret=auto_interpret(interpret))
+
+
+def route_pallas(logits: jax.Array, k: int, interpret=None):
+    return topk_router(logits, k, interpret=auto_interpret(interpret))
+
+
+__all__ = ["moe_gemm", "flash_decode", "topk_router", "expert_ffn_pallas",
+           "decode_attention_pallas", "route_pallas", "on_tpu"]

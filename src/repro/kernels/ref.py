@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the numerics ground truth).
+
+Each ref_* mirrors its kernel's contract exactly; tests sweep shapes/dtypes
+and assert_allclose kernel-vs-ref with interpret=True on CPU.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_moe_gemm(xe: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped expert GEMM.  xe: (E, C, D), w: (E, D, F) -> (E, C, F) in fp32
+    accumulation, cast back to xe.dtype."""
+    out = jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out.astype(xe.dtype)
+
+
+def ref_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, softcap: float = 0.0) -> jax.Array:
+    """Single-token GQA decode attention.
+    q: (B, Hq, D); k, v: (B, S, Hkv, D); lengths: (B,) valid KV length per row.
+    Returns (B, Hq, D)."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    mask = jnp.arange(s)[None, :] < lengths[:, None]          # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    wts = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", wts, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def ref_topk_router(logits: jax.Array, k: int
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused router: softmax -> top-k (renormalized gates) -> capacity
+    positions (GShard order: token-major, then selection index).
+    logits: (T, E) fp32.  Returns (gates (T,k) f32, ids (T,k) i32,
+    pos (T,k) i32 position-within-expert)."""
+    t, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(ids.reshape(-1), e, dtype=jnp.int32)  # (T*k, E)
+    pos_flat = (jnp.cumsum(onehot, axis=0) - 1) * onehot
+    pos = pos_flat.sum(-1).reshape(t, k).astype(jnp.int32)
+    return gates, ids.astype(jnp.int32), pos

@@ -1,0 +1,96 @@
+"""Fused MoE router: softmax + top-k + capacity positions in one pass.
+
+The per-token scheduling primitive the Gimbal expert level feeds on: gates and
+expert ids drive dispatch; the position-in-expert counter implements the
+GShard capacity rule.  Cross-token positions need a running per-expert counter
+-> the token-block grid axis is sequential ("arbitrary") and the counter lives
+in VMEM scratch, carried across blocks (same pattern as flash_decode's online
+softmax state).
+
+Top-k is computed by iterative argmax (k <= 8 for every assigned arch), which
+vectorizes on the VPU without sorting networks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(x_ref, gates_ref, ids_ref, pos_ref, count_ref, *, k: int):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    logits = x_ref[...].astype(jnp.float32)          # (BT, E)
+    bt, e = logits.shape
+    m = logits.max(-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / p.sum(-1, keepdims=True)
+
+    work = probs
+    gsel = []
+    isel = []
+    for _ in range(k):                               # iterative argmax top-k
+        idx = jnp.argmax(work, axis=-1)              # (BT,)
+        val = jnp.max(work, axis=-1)
+        gsel.append(val)
+        isel.append(idx)
+        onehot = jax.lax.broadcasted_iota(jnp.int32, work.shape, 1) == idx[:, None]
+        work = jnp.where(onehot, NEG_INF, work)
+    gates = jnp.stack(gsel, axis=-1)                 # (BT, k)
+    ids = jnp.stack(isel, axis=-1).astype(jnp.int32)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # capacity positions: token-major then selection order (GShard rule)
+    flat_ids = ids.reshape(-1)                       # (BT*k,)
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (bt * k, e), 1)
+           == flat_ids[:, None]).astype(jnp.int32)   # (BT*k, E)
+    run = jnp.cumsum(sel, axis=0) - 1                # 0-based within block
+    base = count_ref[...]                            # (1, E) carried counter
+    pos_flat = ((run + base) * sel).sum(-1)          # (BT*k,)
+    count_ref[...] = base + sel.sum(0, keepdims=True)
+
+    gates_ref[...] = gates
+    ids_ref[...] = ids
+    pos_ref[...] = pos_flat.reshape(bt, k).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_t", "interpret"))
+def topk_router(logits: jax.Array, k: int, *, block_t: int = 1024,
+                interpret: bool = False):
+    """logits: (T, E).  Returns (gates (T,k) f32, ids (T,k) i32, pos (T,k) i32)."""
+    t, e = logits.shape
+    bt = min(block_t, t)
+    tp = -(-t // bt) * bt
+    if tp != t:
+        # pad rows route to expert argmax of zeros=0 but are sliced off below
+        logits = jnp.pad(logits, ((0, tp - t), (0, 0)),
+                         constant_values=NEG_INF / 2)
+    gates, ids, pos = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(tp // bt,),
+        in_specs=[pl.BlockSpec((bt, e), lambda ti: (ti, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
+            pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
+            pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, k), jnp.float32),
+            jax.ShapeDtypeStruct((tp, k), jnp.int32),
+            jax.ShapeDtypeStruct((tp, k), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, e), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(logits)
+    return gates[:t], ids[:t], pos[:t]

@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   512 placeholder host devices back the 16x16 single-pod and 2x16x16
+#   multi-pod production meshes.  Never set this outside this module.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms (EXPERIMENTS.md SS Dry-run / SS Roofline).
+
+Per cell:
+  * jax.jit(step, in_shardings=..., out_shardings=...).lower(**input_specs)
+  * .compile()  — failure here (sharding mismatch, OOM at compile,
+    unsupported collective) is a bug in the system, not in the harness
+  * compiled.memory_analysis()   -> bytes per device (proves it fits)
+  * compiled.cost_analysis()     -> HLO FLOPs / bytes for the roofline
+  * parse compiled.as_text()     -> per-collective operand bytes (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --cell decode_32k [--multi-pod]
+  python -m repro.launch.dryrun --all [--jobs 4] [--multi-pod both]
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+# v5e-class roofline constants (same as sim/costmodel.py and SS Roofline)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device WIRE bytes of every collective in the optimized (per-device,
+    post-SPMD) HLO.  Output shapes are on the LHS of each instruction; wire
+    bytes per device use ring conventions over the replica group of size g:
+
+      all-reduce          2*(g-1)/g * out_bytes   (reduce-scatter + all-gather)
+      all-gather            (g-1)/g * out_bytes
+      reduce-scatter        (g-1)/g * out_bytes * g      (input leaves the node)
+      all-to-all            (g-1)/g * out_bytes
+      collective-permute              out_bytes
+
+    Returns {op: wire_bytes, "total": ..., "counts": {...}}.
+    """
+    out = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s.startswith("%") or "=" not in s:
+            continue
+        lhs, _, rhs = s.partition(" = ")
+        op = None
+        for c in _COLLECTIVES:
+            if re.match(rf"[^(]*\b{c}(-start)?\(", rhs) and f"{c}-done" not in rhs:
+                op = c
+                break
+        if op is None:
+            continue
+        # output shape(s): everything on rhs before the opcode
+        head = rhs.split(f"{op}(")[0].split(f"{op}-start(")[0]
+        b = sum(_shape_bytes(m.group(1), m.group(2))
+                for m in _SHAPE_RE.finditer(head))
+        gm = _GROUP_RE.search(rhs)
+        g = int(gm.group(2)) if gm else 2
+        g = max(g, 2)
+        ring = (g - 1) / g
+        if op == "all-reduce":
+            wire = 2.0 * ring * b
+        elif op == "reduce-scatter":
+            wire = ring * b * g
+        elif op == "collective-permute":
+            wire = float(b)
+        else:  # all-gather, all-to-all
+            wire = ring * b
+        out[op] += wire
+        counts[op] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = cfg.active_params()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch  # decode: one token per row
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: Path,
+             overrides: dict | None = None, smoke: bool = False,
+             depth: int = 0) -> dict:
+    import jax
+    from repro.configs import (at_depth, get_cell, get_config,
+                               get_smoke_config, input_specs)
+    from repro.distributed.sharding import named
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_production_mesh
+
+    t0 = time.time()
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    cell = get_cell(cell_name)
+    tag = (overrides or {}).pop("tag", None) if overrides else None
+    if smoke:  # reduced shapes, same kind — plumbing validation only
+        import dataclasses as _dc
+        cell = _dc.replace(cell, seq_len=256 if cell.kind != "decode" else 512,
+                           global_batch=32)
+    if depth:
+        # roofline probe: same arch at reduced depth, fully unrolled, so
+        # cost_analysis counts every layer (extrapolated in benchmarks/roofline)
+        cfg = at_depth(cfg, depth)
+        overrides = dict(overrides or {})
+        overrides.setdefault("unroll", 4096)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = S.make_ctx(mesh, **(overrides or {}))
+    n_dev = mesh.devices.size
+
+    ispecs = input_specs(cfg, cell)
+    with mesh:
+        if cell.kind == "train":
+            fn, (pspec, ospec), out_spec = S.make_train_step(cfg, ctx, cell)
+            batch, bshard = S.train_inputs(cfg, ctx, cell, ispecs)
+            aparams, aopt = S.abstract_train_state(cfg)
+            jfn = jax.jit(fn,
+                          in_shardings=(named(mesh, pspec), named(mesh, ospec),
+                                        named(mesh, bshard)),
+                          out_shardings=(named(mesh, pspec), named(mesh, ospec),
+                                         named(mesh, out_spec[2])),
+                          donate_argnums=(0, 1))
+            lowered = jfn.lower(aparams, aopt, batch)
+        elif cell.kind == "prefill":
+            from repro.distributed.sharding import input_shardings, param_specs
+            fn, cspecs, out_spec = S.make_prefill_step(cfg, ctx, cell)
+            pspec = param_specs(cfg, ctx)
+            batch, bshard = S.train_inputs(cfg, ctx, cell, ispecs)
+            jfn = jax.jit(fn,
+                          in_shardings=(named(mesh, pspec), named(mesh, bshard)),
+                          out_shardings=named(mesh, out_spec))
+            lowered = jfn.lower(S_abstract_params(cfg), batch)
+        else:  # decode
+            from repro.distributed.sharding import param_specs
+            fn, cspecs, out_spec = S.make_decode_step(cfg, ctx, cell)
+            pspec = param_specs(cfg, ctx)
+            batch, bshard = S.train_inputs(cfg, ctx, cell, ispecs)
+            acache = S.abstract_cache(cfg, cell)
+            jfn = jax.jit(fn,
+                          in_shardings=(named(mesh, pspec), named(mesh, cspecs),
+                                        named(mesh, bshard)),
+                          out_shardings=named(mesh, out_spec),
+                          donate_argnums=(1,))
+            lowered = jfn.lower(S_abstract_params(cfg), acache, batch)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    mf = model_flops(cfg, cell)
+    terms = {
+        # cost_analysis is per-device on the partitioned module
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll["total"] / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    rec = {
+        "arch": arch, "cell": cell_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "depth": depth or cfg.num_layers,
+        "full_depth": get_config(arch).num_layers if not smoke else cfg.num_layers,
+        "n_devices": int(n_dev),
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll["total"],
+        "collectives": {k: v for k, v in coll.items() if k not in ("total",)},
+        "roofline": terms,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / max(flops_dev * n_dev, 1.0),
+        "memory_analysis": _mem_dict(mem),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "overrides": overrides or {},
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    ov = {k: v for k, v in (overrides or {}).items()
+          if not (depth and k == "unroll")}
+    if tag:
+        ov["tag"] = tag
+    suffix = "_".join(f"{k}-{v}" for k, v in ov.items())
+    fname = f"{arch}__{cell_name}__{rec['mesh']}"
+    if depth:
+        fname += f"__depth{depth}"
+    if suffix:
+        fname += f"__{suffix}"
+    (out_dir / f"{fname}.json").write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] {arch} {cell_name} mesh={rec['mesh']} "
+          f"compile={t_compile:.1f}s dominant={dominant} "
+          f"terms(ms)=({terms['compute_s']*1e3:.2f}, {terms['memory_s']*1e3:.2f}, "
+          f"{terms['collective_s']*1e3:.2f}) useful={rec['useful_flops_ratio']:.3f}")
+    print("  memory:", rec["memory_analysis"])
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def S_abstract_params(cfg):
+    from repro.models import model as M
+    return M.abstract_params(cfg)
+
+
+# =============================================================================
+# orchestrator
+# =============================================================================
+
+def _all_cells():
+    from repro.configs import ASSIGNED_ARCHS, dryrun_cells
+    for arch in ASSIGNED_ARCHS:
+        for cell in dryrun_cells(arch):
+            yield arch, cell.name
+
+
+def run_all(jobs: int, multi_pod_mode: str, out_dir: Path,
+            with_depth_probes: bool = True) -> int:
+    """Schedule per (arch, cell): rolled compile on the requested mesh(es)
+    (compile proof + memory analysis) and two reduced-depth fully-unrolled
+    probes on the single-pod mesh (exact roofline costs, extrapolated to full
+    depth by benchmarks/roofline)."""
+    from repro.configs import depth_pair, get_config
+    cells = list(_all_cells())
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[multi_pod_mode]
+    work = []  # (arch, cell, multi_pod, depth)
+    for a, c in cells:
+        for mp in meshes:
+            work.append((a, c, mp, 0))
+        if with_depth_probes:
+            for d in depth_pair(get_config(a)):
+                work.append((a, c, False, d))
+    pending = []
+    for a, c, mp, d in work:
+        mesh = "2x16x16" if mp else "16x16"
+        fname = f"{a}__{c}__{mesh}" + (f"__depth{d}" if d else "")
+        if not (out_dir / f"{fname}.json").exists():
+            pending.append((a, c, mp, d))
+    print(f"[dryrun] {len(pending)}/{len(work)} cells pending")
+    procs: list = []
+    failed = []
+    idx = 0
+    while idx < len(pending) or procs:
+        while idx < len(pending) and len(procs) < jobs:
+            a, c, mp, d = pending[idx]
+            idx += 1
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--cell", c] + (["--multi-pod"] if mp else []) \
+                + (["--depth", str(d)] if d else [])
+            mesh = "2x16x16" if mp else "16x16"
+            log = out_dir / (f"{a}__{c}__{mesh}" + (f"__depth{d}" if d else "") + ".log")
+            out_dir.mkdir(parents=True, exist_ok=True)
+            procs.append((subprocess.Popen(cmd, stdout=log.open("w"),
+                                           stderr=subprocess.STDOUT), a, c, mp, d))
+        time.sleep(2.0)
+        still = []
+        for p, a, c, mp, d in procs:
+            if p.poll() is None:
+                still.append((p, a, c, mp, d))
+            elif p.returncode != 0:
+                failed.append((a, c, mp, d, p.returncode))
+                print(f"[dryrun] FAIL {a} {c} multi_pod={mp} depth={d} rc={p.returncode}",
+                      flush=True)
+            else:
+                print(f"[dryrun] done {a} {c} multi_pod={mp} depth={d}", flush=True)
+        procs = still
+    if failed:
+        print(f"[dryrun] {len(failed)} FAILURES: {failed}")
+        return 1
+    print("[dryrun] sweep complete")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--meshes", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    ap.add_argument("--override", action="append", default=[],
+                    help="ShardCtx overrides, e.g. --override mla_absorb=true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + shapes (plumbing validation)")
+    ap.add_argument("--depth", type=int, default=0,
+                    help="roofline probe: reduced depth, fully unrolled")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    if args.all:
+        return run_all(args.jobs, args.meshes, out_dir)
+    overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                overrides[k] = v
+    run_cell(args.arch, args.cell, args.multi_pod, out_dir, overrides,
+             smoke=args.smoke, depth=args.depth)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,103 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Functional-plane cluster (real jax engines on reduced configs) serving a
+BurstGPT- or ShareGPT-shaped trace with the full Gimbal stack, health
+monitoring, and optional fault injection — the deployment-shaped entry point
+(dryrun.py proves the same step functions lower on the production mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+
+import jax
+
+from repro.configs import get_smoke_config, list_archs
+from repro.core.types import GimbalConfig
+from repro.distributed.fault import HealthConfig, HealthMonitor
+from repro.models import model as M
+from repro.serving.cluster import Cluster
+from repro.serving.engine import Engine
+from repro.workloads.burstgpt import burstgpt_trace
+from repro.workloads.sharegpt import sharegpt_trace
+
+
+def build_cluster(arch: str, variant: str, n_engines: int,
+                  gcfg: GimbalConfig) -> Cluster:
+    cfg = get_smoke_config(arch)
+    engines = []
+    for i in range(n_engines):
+        params = M.init_params(jax.random.key(i), cfg)
+        engines.append(Engine(i, cfg, params, variant=variant, gimbal_cfg=gcfg,
+                              max_slots=4, max_seq=128, prefill_budget=128,
+                              num_expert_devices=max(2, min(4, cfg.num_experts or 2))))
+    return Cluster(engines, variant=variant, gimbal_cfg=gcfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-30b-a3b", choices=list_archs())
+    ap.add_argument("--variant", default="gimbal",
+                    choices=["vllm", "dplb", "sjfs", "edr", "gimbal"])
+    ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--trace", default="burstgpt", choices=["burstgpt", "sharegpt"])
+    ap.add_argument("--n", type=int, default=40)
+    ap.add_argument("--rps", type=float, default=20.0)
+    ap.add_argument("--fail-engine", type=int, default=-1,
+                    help="inject a failure of this engine mid-run")
+    args = ap.parse_args()
+
+    gcfg = GimbalConfig(tau=25, theta_load=64)
+    cluster = build_cluster(args.arch, args.variant, args.engines, gcfg)
+    monitor = HealthMonitor(list(cluster.engines), HealthConfig())
+
+    if args.trace == "burstgpt":
+        trace = burstgpt_trace(n=args.n, rps=args.rps, seed=0)
+        for r in trace:
+            r.prompt_len = max(8, r.prompt_len // 50)
+            r.max_new_tokens = max(2, r.max_new_tokens // 40)
+    else:
+        trace = sharegpt_trace(n_requests=args.n, n_users=max(args.n // 8, 1),
+                               rps=args.rps, vocab_size=64, utterance_mean=12,
+                               answer_mean=8, max_context=96)
+        for r in trace:
+            r.max_new_tokens = 2
+
+    trace = [copy.copy(r) for r in trace]
+    i, now, dt = 0, 0.0, 0.05
+    failed_at = None
+    while True:
+        while i < len(trace) and trace[i].arrival_time <= now:
+            cluster.submit(trace[i], now)
+            i += 1
+        cluster.step(now)
+        monitor.observe(cluster.bus.snapshot(now), now)
+        for eid in monitor.check(now):
+            print(f"[serve] t={now:.2f} engine {eid} DEAD -> re-routing")
+            cluster.fail_engine(eid, now)
+        if args.fail_engine >= 0 and failed_at is None and i >= len(trace) // 2:
+            eid = args.fail_engine
+            print(f"[serve] t={now:.2f} injecting failure of engine {eid}")
+            moved = cluster.fail_engine(eid, now)
+            print(f"[serve] re-routed {moved} requests")
+            failed_at = now
+        now += dt
+        if i >= len(trace) and all(
+                e.num_active() == 0 and len(e.queue) == 0
+                for e in cluster.engines.values() if e.healthy):
+            break
+        if now > 120.0:
+            break
+
+    rep = cluster.report()
+    pf = cluster.prefix_stats()
+    relocs = sum(e.relocations for e in cluster.engines.values())
+    print(f"[serve] {args.variant} on {args.arch}: {rep.n}/{len(trace)} done | "
+          f"TTFT mean {rep.mean_ttft:.3f}s p99 {rep.p99_ttft:.3f}s | "
+          f"TPOT {rep.mean_tpot*1e3:.1f}ms | {rep.throughput_tok_s:.0f} tok/s")
+    print(f"[serve] prefix hits {pf['hit_blocks']} "
+          f"(rate {100*pf['hit_rate']:.1f}%) | expert relocations {relocs}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Step functions (train / prefill / decode) with full sharding annotations —
+what the multi-pod dry-run lowers and what a real TPU deployment would run.
+
+Each make_*_step returns (fn, in_shardings, out_shardings, donate) so callers
+can ``jax.jit(fn, in_shardings=..., out_shardings=..., ...).lower(**specs)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.context import ShardCtx, divides, shard_ctx
+from repro.distributed.sharding import (cache_specs, input_shardings, named,
+                                        param_specs)
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeCell
+from repro.training.optimizer import (AdamWConfig, AdamWState, abstract_adamw,
+                                      adamw_update)
+
+
+def make_ctx(mesh, **overrides) -> ShardCtx:
+    batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return ShardCtx(mesh=mesh, batch_axes=batch_axes, **overrides)
+
+
+def _batch_ax(ctx: ShardCtx, b: int):
+    bdim = 1
+    for a in ctx.batch_axes:
+        bdim *= int(ctx.mesh.shape[a])
+    return ctx.batch_axes if divides(b, bdim) else None
+
+
+def _n_scan(cfg: ModelConfig) -> int:
+    return cfg.num_layers - (cfg.first_k_dense if cfg.is_moe else 0)
+
+
+def placements_input(cfg: ModelConfig) -> Optional[jax.ShapeDtypeStruct]:
+    """(n_moe_layers, E) int32 expert placement perm — the Gimbal expert
+    level's output, a first-class input of every MoE step."""
+    if not cfg.is_moe:
+        return None
+    return jax.ShapeDtypeStruct((cfg.num_moe_layers(), cfg.num_experts), jnp.int32)
+
+
+# =============================================================================
+# loss
+# =============================================================================
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits (B, S, V) fp32 (possibly vocab-sharded); labels (B, S) int32.
+
+    The gold logit is extracted with a one-hot contraction rather than
+    take_along_axis: gathers over the vocab-sharded dim make GSPMD replicate
+    the full f32 logits in the backward pass (SSPerf iteration C4); the
+    one-hot einsum keeps every operand vocab-sharded."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(lse - gold)
+
+
+# =============================================================================
+# train step
+# =============================================================================
+
+def make_train_step(cfg: ModelConfig, ctx: ShardCtx, cell: ShapeCell,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    remat: bool = True):
+    opt_cfg = opt_cfg or AdamWConfig()
+    tcfg = cfg.replace(remat=remat, remat_policy="none") if remat else cfg
+    pspecs = param_specs(cfg, ctx)
+    ospecs = AdamWState(step=P(), m=pspecs, v=pspecs)
+
+    def train_step(params, opt_state, batch):
+        with shard_ctx(ctx):
+            def loss_fn(p):
+                kw = {}
+                if "vision_embeds" in batch:
+                    kw["vision_embeds"] = batch["vision_embeds"]
+                if "frames" in batch:
+                    kw["frames"] = batch["frames"]
+                logits, aux = M.forward_train(
+                    p, tcfg, batch["tokens"],
+                    placements=batch.get("placements"), **kw)
+                if cfg.family == "vlm" and "vision_embeds" in batch:
+                    logits = logits[:, batch["vision_embeds"].shape[1]:, :]
+                loss = cross_entropy(logits, batch["labels"])
+                if cfg.is_moe:
+                    loss = loss + cfg.router_aux_coef * aux.get("load_balance_loss", 0.0) \
+                        + cfg.router_z_coef * aux.get("router_z_loss", 0.0)
+                return loss
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+            metrics = {"loss": loss, **om}
+            return params, opt_state, metrics
+
+    metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    return train_step, (pspecs, ospecs), (pspecs, ospecs, metric_specs)
+
+
+def train_inputs(cfg: ModelConfig, ctx: ShardCtx, cell: ShapeCell,
+                 specs: Dict[str, jax.ShapeDtypeStruct]):
+    """(abstract batch, batch shardings) including placements for MoE."""
+    batch = dict(specs)
+    shardings = input_shardings(cfg, ctx, cell, specs)
+    pl = placements_input(cfg)
+    if pl is not None:
+        batch["placements"] = pl
+        shardings["placements"] = P(None, None)
+    return batch, shardings
+
+
+# =============================================================================
+# serving steps
+# =============================================================================
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx, cell: ShapeCell):
+    b = cell.global_batch
+    total_seq = cell.seq_len + (cfg.vision_prefix_len if cfg.family == "vlm" else 0)
+    cspecs = cache_specs(cfg, ctx, b, total_seq)
+    b_ax = _batch_ax(ctx, b)
+
+    def prefill_step(params, batch):
+        with shard_ctx(ctx):
+            cache = M.init_cache(cfg, b, total_seq)
+            cache = jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(ctx.mesh, s)), cache, cspecs,
+                is_leaf=lambda x: isinstance(x, jax.Array))
+            kw = {}
+            if "vision_embeds" in batch:
+                kw["vision_embeds"] = batch["vision_embeds"]
+            if "frames" in batch:
+                kw["frames"] = batch["frames"]
+            logits, new_cache, _ = M.prefill(
+                params, cfg, batch["tokens"], cache,
+                placements=batch.get("placements"), **kw)
+            first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return first, new_cache
+
+    out_shardings = (P(b_ax), cspecs)
+    return prefill_step, cspecs, out_shardings
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ShardCtx, cell: ShapeCell):
+    """One new token against a KV cache of cell.seq_len (serve_step)."""
+    b = cell.global_batch
+    total_seq = cell.seq_len + (cfg.vision_prefix_len if cfg.family == "vlm" else 0)
+    cspecs = cache_specs(cfg, ctx, b, total_seq)
+    b_ax = _batch_ax(ctx, b)
+
+    def serve_step(params, cache, batch):
+        with shard_ctx(ctx):
+            logits, new_cache, _ = M.decode_step(
+                params, cfg, batch["tokens"], cache, batch["cache_pos"],
+                placements=batch.get("placements"),
+                mla_absorb=ctx.mla_absorb)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+    out_shardings = (P(b_ax), cspecs)
+    return serve_step, cspecs, out_shardings
+
+
+def abstract_cache(cfg: ModelConfig, cell: ShapeCell) -> Any:
+    total_seq = cell.seq_len + (cfg.vision_prefix_len if cfg.family == "vlm" else 0)
+    return jax.eval_shape(lambda: M.init_cache(cfg, cell.global_batch, total_seq))
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    aparams = M.abstract_params(cfg)
+    return aparams, abstract_adamw(aparams, opt_cfg)

@@ -1,0 +1,111 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Functional-plane loop (runs for real on CPU with reduced configs; the same
+step lowers on the production mesh via dryrun.py):
+  data -> train_step (jit, sharded) -> metrics -> periodic checkpoint.
+
+Fault tolerance: every run starts by probing the checkpoint directory and
+resumes from the newest complete manifest; SIGTERM-safe because checkpoints
+are written atomically (see training/checkpoint.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import get_cell, get_config, get_smoke_config
+from repro.distributed.sharding import named
+from repro.launch import steps as S
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.models.config import ShapeCell
+from repro.training.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.training.data import DataConfig, TokenStream
+from repro.training.optimizer import AdamWConfig, init_adamw
+
+
+def train(arch: str, steps: int = 200, batch: int = 8, seq: int = 128,
+          ckpt_dir: str = "", ckpt_every: int = 50, smoke: bool = True,
+          mesh_shape=None, log_every: int = 10, seed: int = 0):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    cell = ShapeCell("train_custom", seq, batch, "train")
+    opt_cfg = AdamWConfig(moment_dtype="float32", warmup_steps=10,
+                          decay_steps=max(steps, 2))
+
+    devs = jax.devices()
+    if mesh_shape is None:
+        n = len(devs)
+        mesh_shape = (1, n)
+    mesh = make_mesh(mesh_shape, ("data", "model"))
+    ctx = S.make_ctx(mesh)
+
+    data = TokenStream(DataConfig(vocab_size=cfg.vocab_size, global_batch=batch,
+                                  seq_len=seq, seed=seed))
+
+    with mesh:
+        fn, (pspec, ospec), out_spec = S.make_train_step(cfg, ctx, cell,
+                                                         opt_cfg, remat=False)
+        params = M.init_params(jax.random.key(seed), cfg)
+        opt_state = init_adamw(params, opt_cfg)
+        start = 0
+        if ckpt_dir and latest_step(ckpt_dir) is not None:
+            start, (params, opt_state) = restore_checkpoint(
+                ckpt_dir, (params, opt_state))
+            print(f"[train] resumed from step {start}")
+        jfn = jax.jit(fn,
+                      in_shardings=(named(mesh, pspec), named(mesh, ospec), None),
+                      out_shardings=(named(mesh, pspec), named(mesh, ospec),
+                                     named(mesh, out_spec[2])),
+                      donate_argnums=(0, 1))
+
+        losses = []
+        t0 = time.time()
+        for step in range(start, steps):
+            b = data.batch_at(step)
+            batch_dev = {k: jax.numpy.asarray(v) for k, v in b.items()}
+            if cfg.is_moe:
+                from repro.core.placement import static_placement
+                perm = static_placement(cfg.num_experts, min(ctx.tp, cfg.num_experts))
+                batch_dev["placements"] = jax.numpy.broadcast_to(
+                    jax.numpy.asarray(perm), (cfg.num_moe_layers(), cfg.num_experts))
+            if cfg.family == "vlm":
+                batch_dev["vision_embeds"] = jax.numpy.zeros(
+                    (batch, cfg.vision_prefix_len, cfg.d_model), cfg.adtype)
+            if cfg.is_encoder_decoder:
+                batch_dev["frames"] = jax.numpy.zeros(
+                    (batch, min(cfg.encoder_len, seq), cfg.d_model), cfg.adtype)
+            params, opt_state, metrics = jfn(params, opt_state, batch_dev)
+            losses.append(float(metrics["loss"]))
+            if step % log_every == 0 or step == steps - 1:
+                print(f"[train] step {step} loss {losses[-1]:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({(time.time()-t0):.1f}s)")
+            if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+                save_checkpoint(ckpt_dir, step + 1, (params, opt_state))
+        if ckpt_dir:
+            save_checkpoint(ckpt_dir, steps, (params, opt_state))
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-30b-a3b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    losses = train(args.arch, args.steps, args.batch, args.seq, args.ckpt_dir,
+                   args.ckpt_every, smoke=not args.full_config, seed=args.seed)
+    print(f"[train] done; first loss {losses[0]:.4f} last loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

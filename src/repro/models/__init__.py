@@ -1,0 +1,11 @@
+from repro.models.config import ModelConfig, ShapeCell, SHAPE_CELLS, cell_applicable
+from repro.models.model import (abstract_params, decode_step, forward, forward_train,
+                                init_cache, init_params, prefill)
+from repro.models.moe import ExpertPlacement, permute_expert_weights
+
+__all__ = [
+    "ModelConfig", "ShapeCell", "SHAPE_CELLS", "cell_applicable",
+    "abstract_params", "decode_step", "forward", "forward_train",
+    "init_cache", "init_params", "prefill",
+    "ExpertPlacement", "permute_expert_weights",
+]

@@ -1,0 +1,211 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD forward for train/prefill (O(L·Q) with chunk Q) and O(1)
+recurrent decode — the reason mamba2/zamba2 own the long_500k cells.
+
+Layout: x (B, L, H, P) heads/headdim; state (B, H, P, N).
+Single B/C group (G=1), as in the 370m reference config.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.context import current_ctx, divides
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+
+
+def _head_constraint(x: jax.Array, head_axis: int) -> jax.Array:
+    """Shard the SSD head dim over the model mesh axis (TP for SSM compute)."""
+    ctx = current_ctx()
+    if ctx is None or not divides(x.shape[head_axis], ctx.tp):
+        return x
+    bdim = 1
+    for a in ctx.batch_axes:
+        bdim *= int(ctx.mesh.shape[a])
+    b_ax = ctx.batch_axes if divides(x.shape[0], bdim) else None
+    spec = [None] * x.ndim
+    spec[0] = b_ax
+    spec[head_axis] = ctx.model_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n                      # x, B, C all pass the causal conv
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        # in_proj -> [z (di), xBC (di + 2n), dt (h)]
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di + 2 * n + h)) * s).astype(cfg.adtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1).astype(cfg.adtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.adtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((di,), cfg.adtype),
+        "w_out": (jax.random.normal(ks[2], (di, d)) * di ** -0.5).astype(cfg.adtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) with out[..., i, j] = sum_{j < s <= i} x_s,
+    -inf above the diagonal."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _split_proj(params, cfg: ModelConfig, u: jax.Array):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = jnp.einsum("bld,de->ble", u, params["w_in"])
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt_raw = proj[..., di + di + 2 * n:]
+    return z, xbc, dt_raw
+
+
+def _conv_full(params, xbc: jax.Array) -> jax.Array:
+    """Causal depthwise conv over (B, L, C) with kernel (K, C)."""
+    k = params["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * params["conv_w"][i] for i in range(k))
+    return jax.nn.silu((out + params["conv_b"]).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_chunked(x, dt, A, B_, C, chunk: int, initial_state=None):
+    """SSD chunked scan.
+    x: (B,L,H,P)  dt: (B,L,H)  A: (H,)  B_, C: (B,L,N)  (single group).
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+
+    Ragged L is padded up to a chunk multiple with dt=0 positions (decay
+    exp(0)=1, update dt*x*B=0), which leaves the carried state exact."""
+    b, l, h, p = x.shape
+    n = B_.shape[-1]
+    q = min(chunk, l)
+    l0 = l
+    if l % q != 0:
+        pad = q - l % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        l = l + pad
+    nc = l // q
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = B_.reshape(b, nc, q, n)
+    cc = C.reshape(b, nc, q, n)
+
+    dA = (dtc * A).transpose(0, 3, 1, 2)                     # (B,H,nc,Q)
+    dA_cs = jnp.cumsum(dA, axis=-1)                          # (B,H,nc,Q)
+
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA))                                 # (B,H,nc,Q,Q)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp,bcsh->bclhp",
+                        cc, bc, L, xc, dtc)
+
+    # chunk states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)          # (B,H,nc,Q)
+    states = jnp.einsum("bcln,bhcl,bclhp,bclh->bchpn", bc, decay_states, xc, dtc)
+
+    # inter-chunk recurrence
+    chunk_decay = dA_cs[..., -1]                             # (B,H,nc)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), x.dtype)
+    pad = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(pad))                      # (B,H,nc+1,nc+1)
+    states_all = jnp.concatenate([initial_state[:, None].astype(states.dtype), states], axis=1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states_all)
+    prev_states = new_states[:, :-1]                         # state entering each chunk
+    final_state = new_states[:, -1]
+
+    # contribution of carried-in state
+    state_decay = jnp.exp(dA_cs)                             # (B,H,nc,Q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y[:, :l0], final_state
+
+
+def mamba2_full(params: dict, cfg: ModelConfig, u: jax.Array,
+                cache: Optional[dict] = None):
+    """Train/prefill pass.  u: (B, L, d).  Returns (out, new_cache|None)."""
+    di, n, h, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    b, l, _ = u.shape
+    z, xbc, dt_raw = _split_proj(params, cfg, u)
+    xbc = _conv_full(params, xbc)
+    x = _head_constraint(xbc[..., :di].reshape(b, l, h, p), 2)
+    B_ = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = _head_constraint(
+        jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"]), 2)
+    A = -jnp.exp(params["A_log"])
+
+    y, final_state = ssd_chunked(x.astype(jnp.float32), dt, A,
+                                 B_.astype(jnp.float32), C.astype(jnp.float32),
+                                 cfg.ssm_chunk)
+    y = y + x.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bld,de->ble", y, params["w_out"])
+
+    new_cache = None
+    if cache is not None:
+        tail = xbc_raw_tail(params, cfg, u)  # (B, K-1, conv_ch) pre-activation tail
+        new_cache = {"ssm": final_state.astype(cache["ssm"].dtype),
+                     "conv": tail.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def xbc_raw_tail(params, cfg: ModelConfig, u: jax.Array) -> jax.Array:
+    """Last K-1 pre-conv xBC inputs (needed to continue the causal conv in decode)."""
+    _, xbc, _ = _split_proj(params, cfg, u)
+    k = cfg.ssm_conv
+    return xbc[:, -(k - 1):, :]
+
+
+def mamba2_decode(params: dict, cfg: ModelConfig, u: jax.Array, cache: dict):
+    """One-token recurrent step.  u: (B,1,d); cache {"ssm": (B,H,P,N), "conv": (B,K-1,CC)}.
+    Returns (out (B,1,d), new_cache)."""
+    di, n, h, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    b = u.shape[0]
+    z, xbc_new, dt_raw = _split_proj(params, cfg, u)      # (B,1,·)
+    # causal conv over [cached K-1 inputs ++ new input]
+    window = jnp.concatenate([cache["conv"].astype(u.dtype), xbc_new], axis=1)  # (B,K,CC)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(u.dtype)             # (B,CC)
+    x = xbc[..., :di].reshape(b, h, p)
+    B_ = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+
+    h_prev = cache["ssm"].astype(jnp.float32)
+    decay = jnp.exp(dt * A)[..., None, None]                                    # (B,H,1,1)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x.astype(jnp.float32), B_.astype(jnp.float32))
+    h_new = h_prev * decay + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bld,de->ble", y, params["w_out"])
+    new_cache = {"ssm": h_new.astype(cache["ssm"].dtype),
+                 "conv": window[:, 1:, :].astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+    }

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts layer with placement-aware dispatch.
+
+The Gimbal expert level (core/placement.py) produces a *placement permutation*
+``perm`` mapping logical expert id -> physical slot.  Expert weights are stored
+in SLOT order and sharded over the ``model`` mesh axis (slot s lives on chip
+s // (E / |model|)), so relocating an expert == permuting the stacked weight
+arrays + updating ``perm``.  The router works in logical-expert space and maps
+selected ids through ``perm`` before dispatch, so placement never changes
+numerics — property-tested in tests/test_placement.py.
+
+Two dispatch strategies (same numerics; §Perf compares them):
+  * "dense"  — GShard/Switch-style one-hot einsum dispatch (classic TPU MoE,
+               our paper-faithful baseline).
+  * "gather" — sort-free gather/scatter dispatch: build an (E, C) token-index
+               table with the same capacity rule, gather tokens, grouped GEMM,
+               scatter-add back.  Avoids the O(T·E·C·d) dispatch matmuls.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_ffn
+
+
+class ExpertPlacement(NamedTuple):
+    """perm[e] = physical slot of logical expert e;  inv[s] = logical expert in slot s."""
+    perm: jax.Array   # (E,) int32
+    inv: jax.Array    # (E,) int32
+
+    @staticmethod
+    def identity(num_experts: int) -> "ExpertPlacement":
+        eye = jnp.arange(num_experts, dtype=jnp.int32)
+        return ExpertPlacement(perm=eye, inv=eye)
+
+    @staticmethod
+    def from_perm(perm) -> "ExpertPlacement":
+        perm = jnp.asarray(perm, jnp.int32)
+        inv = jnp.zeros_like(perm).at[perm].set(jnp.arange(perm.shape[0], dtype=jnp.int32))
+        return ExpertPlacement(perm=perm, inv=inv)
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "w_router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * s_in).astype(cfg.adtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * s_in).astype(cfg.adtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * s_out).astype(cfg.adtype),
+    }
+    if cfg.num_shared_experts > 0:
+        p["shared"] = init_ffn(ks[4], d, cfg.moe_d_ff * cfg.num_shared_experts, cfg.adtype)
+    return p
+
+
+def router_probs(logits: jax.Array) -> jax.Array:
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def top_k_gating(probs: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Returns (gates (T,k) renormalized, expert ids (T,k))."""
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def _capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(cfg.capacity_factor * cfg.moe_top_k * num_tokens / cfg.num_experts) + 1
+    # MXU-friendly: round capacity up to a multiple of 8 (sublane dim)
+    return max(8, -(-c // 8) * 8)
+
+
+def _expert_ffn(params: dict, xe: jax.Array) -> jax.Array:
+    """xe: (E, C, d) -> (E, C, d) gated FFN per expert (grouped GEMM)."""
+    gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(xe.dtype) * up
+    return jnp.einsum("ecf,efd->ecd", act, params["w_down"])
+
+
+def _dispatch_tables(slot_idx: jax.Array, gates: jax.Array, num_slots: int, capacity: int):
+    """Capacity assignment shared by both dispatch modes.
+
+    slot_idx: (T, k) physical slot per selection; gates: (T, k).
+    Returns (pos (T,k) position-in-slot or >=capacity if dropped,
+             keep (T,k) bool).
+    Priority: earlier tokens first, then lower k — the GShard rule.
+    """
+    t, k = slot_idx.shape
+    flat = slot_idx.reshape(-1)                                   # (T*k,) token-major
+    onehot = jax.nn.one_hot(flat, num_slots, dtype=jnp.int32)     # (T*k, E)
+    pos_flat = (jnp.cumsum(onehot, axis=0) - 1) * onehot          # (T*k, E)
+    pos = (pos_flat.sum(-1)).reshape(t, k)                        # position within its slot
+    keep = pos < capacity
+    return pos, keep
+
+
+def moe_apply(params: dict, cfg: ModelConfig, x: jax.Array,
+              placement: Optional[ExpertPlacement] = None,
+              dispatch_mode: str = "dense",
+              return_stats: bool = False):
+    """x: (B, S, d).  Returns (y, aux) where aux carries router losses and,
+    when return_stats, per-expert activation counts + per-token expert ids
+    (the signals Gimbal's affinity/EPLB collectors consume)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.moe_top_k
+    xf = x.reshape(t, d)
+    if placement is None:
+        placement = ExpertPlacement.identity(e)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["w_router"])
+    probs = router_probs(logits)                                   # logical space
+    gates, expert_ids = top_k_gating(probs, k)                     # (T,k) logical
+    slot_idx = placement.perm[expert_ids]                          # physical slots
+
+    cap = _capacity(cfg, t)
+    pos, keep = _dispatch_tables(slot_idx, gates, e, cap)
+    gates = gates.astype(x.dtype)
+
+    if dispatch_mode == "dense":
+        # (T,k,E) x (T,k,C) -> dispatch (T,E,C)
+        oh_e = jax.nn.one_hot(slot_idx, e, dtype=x.dtype) * keep[..., None]
+        oh_c = jax.nn.one_hot(pos, cap, dtype=x.dtype)
+        dispatch = jnp.einsum("tke,tkc->tec", oh_e, oh_c)
+        combine = jnp.einsum("tke,tkc,tk->tec", oh_e, oh_c, gates)
+        xe = jnp.einsum("tec,td->ecd", dispatch, xf)
+        ye = _expert_ffn(params, xe)
+        y = jnp.einsum("tec,ecd->td", combine, ye)
+    elif dispatch_mode == "gather":
+        # token-index table (E, C): which token sits in slot (e, c)
+        tok_ids = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None], (t, k)).reshape(-1)
+        slot_flat = jnp.where(keep, slot_idx, e).reshape(-1)       # dropped -> slot e (overflow row)
+        pos_flat = jnp.where(keep, pos, 0).reshape(-1)
+        table = jnp.full((e + 1, cap), t, dtype=jnp.int32)         # t == "no token"
+        table = table.at[slot_flat, pos_flat].set(tok_ids, mode="drop")
+        table = table[:e]                                          # (E, C)
+        valid = table < t
+        xe = jnp.where(valid[..., None],
+                       jnp.take(xf, jnp.minimum(table, t - 1), axis=0), 0).astype(x.dtype)
+        ye = _expert_ffn(params, xe)
+        # combine: scatter-add expert outputs back, weighted by gate
+        gate_tbl = jnp.zeros((e + 1, cap), x.dtype).at[slot_flat, pos_flat].set(
+            (gates * keep).reshape(-1), mode="drop")[:e]
+        y = jnp.zeros((t, d), x.dtype).at[jnp.minimum(table, t - 1).reshape(-1)].add(
+            (ye * gate_tbl[..., None]).reshape(e * cap, d) *
+            valid.reshape(-1, 1).astype(x.dtype), mode="drop")
+    else:
+        raise ValueError(f"unknown dispatch_mode {dispatch_mode!r}")
+
+    if cfg.num_shared_experts > 0:
+        from repro.models.layers import ffn_apply
+        y = y + ffn_apply(params["shared"], xf)
+
+    # ---- router aux (always fp32) -------------------------------------------
+    me = probs.mean(0)                                             # (E,) mean prob, logical
+    # fraction of tokens routed to each LOGICAL expert (pre-placement)
+    ce = jnp.zeros((e,), jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (t * k)
+    aux = {
+        "load_balance_loss": e * jnp.sum(me * ce),
+        "router_z_loss": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+    }
+    if return_stats:
+        aux["expert_counts"] = jnp.zeros((e,), jnp.int32).at[expert_ids.reshape(-1)].add(1)
+        aux["expert_ids"] = expert_ids.reshape(b, s, k)            # logical ids per token
+        aux["dropped_frac"] = 1.0 - keep.mean()
+    return y.reshape(b, s, d), aux
+
+
+def permute_expert_weights(params: dict, old: ExpertPlacement, new: ExpertPlacement) -> dict:
+    """Physically relocate stacked expert weights from placement `old` to `new`.
+    slot_new[new.perm[e]] = slot_old[old.perm[e]]."""
+    gather_idx = old.perm[new.inv]    # for each new slot, which old slot holds that expert
+    out = dict(params)
+    for name in ("w_gate", "w_up", "w_down"):
+        out[name] = params[name][gather_idx]
+    return out

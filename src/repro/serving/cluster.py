@@ -1,0 +1,117 @@
+"""The DP serving cluster: Gimbal router + N engines + fault tolerance.
+
+Maps the paper's Figure 2 topology: a global request pool feeds the DP Engine
+Load Balancer, which dispatches to engine replicas; each engine runs its own
+SJF scheduler and (for MoE archs) Expert Dynamic Replacement.
+
+Fault tolerance / elasticity (beyond-paper, required at 1000+ node scale):
+  * fail_engine(): requests on a dead engine are drained and re-routed
+    (KV state is lost -> they re-prefill elsewhere).
+  * add_engine()/remove_engine(): elastic pool resize; the router's candidate
+    set updates live.
+  * hedged dispatch: with GimbalConfig.hedge_threshold > 0, requests stuck in
+    a queue past the threshold are re-dispatched to the least-loaded engine.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.gimbal import make_router
+from repro.core.types import GimbalConfig, Request
+from repro.serving.engine import Engine
+from repro.serving.metrics import MetricsBus, summarize
+
+
+class Cluster:
+    def __init__(self, engines: Sequence[Engine], variant: str = "gimbal",
+                 gimbal_cfg: Optional[GimbalConfig] = None, bus_delay: float = 0.05):
+        self.gcfg = gimbal_cfg or GimbalConfig()
+        self.engines: Dict[int, Engine] = {e.engine_id: e for e in engines}
+        self.router = make_router(variant, list(self.engines), self.gcfg)
+        self.bus = MetricsBus(delay=bus_delay)
+        self.finished: List[Request] = []
+        self.variant = variant
+
+    # ------------------------------------------------------------------ dispatch
+    def submit(self, r: Request, now: float) -> int:
+        metrics = self.bus.snapshot(now)
+        eid = self.router.select(r, metrics, now)
+        r.engine_id = eid
+        self.engines[eid].submit(r, now)
+        return eid
+
+    # ------------------------------------------------------------------ execution
+    def step(self, now: float) -> List[Request]:
+        done: List[Request] = []
+        for e in self.engines.values():
+            if not e.healthy:
+                continue
+            done.extend(e.step(now))
+            self.bus.publish(e.metrics(now))
+        self._maybe_hedge(now)
+        self.finished.extend(done)
+        return done
+
+    def run_until_drained(self, t0: float = 0.0, dt: float = 0.01,
+                          max_steps: int = 100_000) -> List[Request]:
+        now = t0
+        for _ in range(max_steps):
+            self.step(now)
+            now += dt
+            if all(e.num_active() == 0 and len(e.queue) == 0
+                   for e in self.engines.values() if e.healthy):
+                break
+        return self.finished
+
+    def _maybe_hedge(self, now: float) -> None:
+        if self.gcfg.hedge_threshold <= 0 or not hasattr(self.router, "hedge_target"):
+            return
+        metrics = self.bus.snapshot(now)
+        # plan all moves against the pass-start state, then apply: otherwise a
+        # request hedged 0->1 is immediately re-hedged 1->0 within the pass
+        moves = []
+        for e in self.engines.values():
+            if not e.healthy:
+                continue
+            for r in e.queue._items:
+                last = getattr(r, "_hedged_at", None)
+                if last is not None and now - last < self.gcfg.hedge_threshold:
+                    continue  # cooldown: one hedge per threshold window
+                tgt = self.router.hedge_target(r, metrics, now)
+                if tgt is not None and tgt != e.engine_id:
+                    moves.append((e, r, tgt))
+        for e, r, tgt in moves:
+            e.queue._items.remove(r)
+            r.engine_id = tgt
+            r._hedged_at = now
+            self.engines[tgt].submit(r, now)
+
+    # ------------------------------------------------------------------ fault tolerance
+    def fail_engine(self, engine_id: int, now: float) -> int:
+        """Simulate a node failure: mark dead, drain, re-route.  Returns the
+        number of re-routed requests."""
+        e = self.engines[engine_id]
+        e.healthy = False
+        self.router.remove_engine(engine_id)
+        orphans = e.drain_all()
+        for r in orphans:
+            self.submit(r, now)
+        return len(orphans)
+
+    def restore_engine(self, engine_id: int) -> None:
+        self.engines[engine_id].healthy = True
+        self.router.add_engine(engine_id)
+
+    def add_engine(self, engine: Engine) -> None:
+        self.engines[engine.engine_id] = engine
+        self.router.add_engine(engine.engine_id)
+
+    # ------------------------------------------------------------------ reporting
+    def report(self, horizon: Optional[float] = None):
+        return summarize(self.finished, horizon)
+
+    def prefix_stats(self) -> Dict[str, float]:
+        hits = sum(e.prefix.hit_blocks for e in self.engines.values())
+        probed = sum(e.prefix.probed_blocks for e in self.engines.values())
+        return {"hit_blocks": hits, "probed_blocks": probed,
+                "hit_rate": hits / max(probed, 1)}

@@ -1,0 +1,121 @@
+"""KV-cache management for the serving engine.
+
+Two layers:
+  * SlotKVCache — the device-side cache: fixed decode slots (JetStream-style
+    TPU serving layout; static shapes for XLA).  Wraps models.init_cache and
+    tracks per-slot occupancy.  `usage()` is the KV-usage signal Alg. 1 reads;
+    for SSM/hybrid archs it generalizes to state-slot occupancy (DESIGN.md §4).
+  * BlockLedger — vLLM-style block accounting (host-side bookkeeping) used for
+    the prefix cache and the simulator's KV-pressure model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import config as mcfg
+from repro.models import model as M
+
+
+def write_slot(cache, slot_cache, slot) -> Any:
+    """Insert a batch=1 sub-cache into batch slot `slot` of the batched cache.
+    The batch axis of each leaf is located as the unique axis whose size
+    differs between the batched and single-slot trees (requires max_slots > 1)."""
+    def upd(c, s):
+        axes = [i for i, (a, b) in enumerate(zip(c.shape, s.shape)) if a != b]
+        ax = axes[0] if axes else 0
+        idx = [0] * c.ndim
+        idx[ax] = slot
+        return jax.lax.dynamic_update_slice(c, s.astype(c.dtype), tuple(idx))
+    return jax.tree.map(upd, cache, slot_cache)
+
+
+class SlotKVCache:
+    def __init__(self, model_cfg: mcfg.ModelConfig, max_slots: int, max_seq: int,
+                 dtype=None):
+        assert max_slots > 1, "slot cache requires max_slots > 1 (batch-axis inference)"
+        self.model_cfg = model_cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.cache = M.init_cache(model_cfg, max_slots, max_seq, dtype)
+        self.slot_len = np.zeros(max_slots, np.int64)     # tokens resident per slot
+        self.slot_free = [True] * max_slots
+
+    # --- allocation -------------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        for i, f in enumerate(self.slot_free):
+            if f:
+                self.slot_free[i] = False
+                self.slot_len[i] = 0
+                return i
+        return None
+
+    def free(self, slot: int) -> None:
+        self.slot_free[slot] = True
+        self.slot_len[slot] = 0
+
+    @property
+    def num_free(self) -> int:
+        return sum(self.slot_free)
+
+    # --- metrics (Alg. 1 signal) --------------------------------------------------
+    def usage(self) -> float:
+        """Fraction of KV capacity in use.  Attention archs: resident tokens /
+        total token capacity.  Pure-SSM archs: occupied slots / slots (state is
+        constant-size per sequence)."""
+        if self.model_cfg.num_attention_layers() == 0:
+            return 1.0 - self.num_free / self.max_slots
+        return float(self.slot_len.sum()) / (self.max_slots * self.max_seq)
+
+    def kv_bytes_used(self) -> int:
+        return int(self.slot_len.sum()) * self.model_cfg.kv_bytes_per_token()
+
+    def positions(self) -> jnp.ndarray:
+        return jnp.asarray(np.minimum(self.slot_len, self.max_seq - 1), jnp.int32)
+
+
+class BlockLedger:
+    """vLLM-style block accounting: seq -> blocks of `block_size` tokens.
+    Used for simulator KV pressure + prefix-cache hit bookkeeping."""
+
+    def __init__(self, total_blocks: int, block_size: int = 16):
+        self.total_blocks = total_blocks
+        self.block_size = block_size
+        self.used_blocks = 0
+        self.seq_blocks: Dict[int, int] = {}
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def can_alloc(self, tokens: int) -> bool:
+        return self.used_blocks + self.blocks_for(tokens) <= self.total_blocks
+
+    def alloc(self, seq_id: int, tokens: int) -> bool:
+        need = self.blocks_for(tokens)
+        if self.used_blocks + need > self.total_blocks:
+            return False
+        self.seq_blocks[seq_id] = need
+        self.used_blocks += need
+        return True
+
+    def extend(self, seq_id: int, new_total_tokens: int) -> bool:
+        """Grow a sequence to `new_total_tokens`; returns False on OOM."""
+        have = self.seq_blocks.get(seq_id, 0)
+        need = self.blocks_for(new_total_tokens)
+        if need <= have:
+            return True
+        if self.used_blocks + (need - have) > self.total_blocks:
+            return False
+        self.used_blocks += need - have
+        self.seq_blocks[seq_id] = need
+        return True
+
+    def release(self, seq_id: int) -> None:
+        self.used_blocks -= self.seq_blocks.pop(seq_id, 0)
+
+    @property
+    def usage(self) -> float:
+        return self.used_blocks / max(self.total_blocks, 1)

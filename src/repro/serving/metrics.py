@@ -1,0 +1,72 @@
+"""Metric plumbing: the async engine->balancer bus (paper's ZeroMQ channel) and
+the request-level latency recorder (TTFT / TPOT / throughput, §V-A.5)."""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.types import EngineMetrics, Request
+
+
+class MetricsBus:
+    """Asynchronous metric delivery with explicit propagation delay: engines
+    publish snapshots; the balancer reads the newest snapshot whose publish
+    time + delay <= now.  Models the paper's ZeroMQ staleness semantics."""
+
+    def __init__(self, delay: float = 0.05):
+        self.delay = delay
+        self._log: Dict[int, List[EngineMetrics]] = {}
+
+    def publish(self, m: EngineMetrics) -> None:
+        self._log.setdefault(m.engine_id, []).append(m)
+
+    def snapshot(self, now: float) -> Dict[int, EngineMetrics]:
+        out: Dict[int, EngineMetrics] = {}
+        for eid, ms in self._log.items():
+            vis = [m for m in ms if m.timestamp + self.delay <= now]
+            if vis:
+                out[eid] = vis[-1]
+            # GC old entries
+            if len(ms) > 64:
+                self._log[eid] = ms[-32:]
+        return out
+
+
+@dataclasses.dataclass
+class LatencyReport:
+    n: int
+    mean_ttft: float
+    p50_ttft: float
+    p99_ttft: float
+    mean_tpot: float
+    p99_tpot: float
+    throughput_tok_s: float
+    throughput_req_s: float
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def summarize(requests: Sequence[Request], horizon: Optional[float] = None) -> LatencyReport:
+    done = [r for r in requests if r.finish_time is not None]
+    ttfts = [r.ttft for r in done if r.ttft is not None]
+    tpots = [r.tpot for r in done if r.tpot is not None]
+    if not done or not ttfts:
+        return LatencyReport(0, *([float("nan")] * 6), 0.0)
+    t0 = min(r.arrival_time for r in done)
+    t1 = horizon if horizon is not None else max(r.finish_time for r in done)
+    span = max(t1 - t0, 1e-9)
+    tokens = sum(r.generated for r in done)
+    return LatencyReport(
+        n=len(done),
+        mean_ttft=float(np.mean(ttfts)),
+        p50_ttft=float(np.percentile(ttfts, 50)),
+        p99_ttft=float(np.percentile(ttfts, 99)),
+        mean_tpot=float(np.mean(tpots)) if tpots else float("nan"),
+        p99_tpot=float(np.percentile(tpots, 99)) if tpots else float("nan"),
+        throughput_tok_s=tokens / span,
+        throughput_req_s=len(done) / span,
+    )

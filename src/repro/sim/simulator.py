@@ -1,0 +1,259 @@
+"""Discrete-event simulator of the Gimbal serving cluster (performance plane).
+
+Replays BurstGPT/ShareGPT traces against {vllm, dplb, sjfs, edr, gimbal}
+variants at production scale using the roofline cost model for per-iteration
+latency (sim/costmodel.py).  This is how the paper's §V tables (Figs. 6-12)
+are reproduced quantitatively on CPU-only hardware — the REAL scheduler code
+(core/router.py, core/sjf.py, core/placement.py) makes every decision; only
+model execution time is analytic.
+
+Engine model (vLLM-style continuous batching, per §V-A.1):
+  * each engine owns one device; one iteration = admit under the chunked-
+    prefill token budget (prefills join the running batch), then one decode
+    step for all running requests;
+  * KV pressure from the cost model's capacity estimate gates admission;
+  * MoE expert imbalance couples engines through the hotspot multiplier
+    (max expert load / mean) and affinity cut fraction produced by the
+    EXPERT-LEVEL placement — the same numbers core/placement.py optimizes;
+  * expert relocation (every tau steps) costs migration bytes on the links.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.affinity import synthetic_stats
+from repro.core.gimbal import make_router, variant_flags
+from repro.core.placement import (comm_cut, eplb_placement, gimbal_placement,
+                                  migration_cost, perm_to_assignment,
+                                  row_imbalance, static_placement)
+from repro.core.sjf import fcfs_order, sjf_order
+from repro.core.types import EngineMetrics, GimbalConfig, Request
+from repro.models.config import ModelConfig
+from repro.serving.metrics import LatencyReport, MetricsBus, summarize
+from repro.serving.prefix_cache import PrefixCache
+from repro.sim.costmodel import CostModel, HardwareProfile, PROFILES
+
+
+@dataclasses.dataclass
+class SimEngine:
+    engine_id: int
+    cost: CostModel
+    gcfg: GimbalConfig
+    sjf: bool
+    prefill_budget: int = 2048
+    max_running: int = 256
+    kv_pool_tokens: int = 0      # 0 -> cost-model estimate
+
+    def __post_init__(self):
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []   # decoding requests
+        self.ctx_tokens: Dict[int, int] = {}
+        self.kv_capacity = self.kv_pool_tokens or self.cost.kv_capacity_tokens()
+        self.busy_until = 0.0
+        # vLLM's prefix cache IS the KV block pool: bound + LRU-churn it
+        self.prefix = PrefixCache(capacity_blocks=max(self.kv_capacity // 16, 256))
+        self.kv_tokens = 0
+
+    # --- metrics (Alg. 1 inputs) ---------------------------------------------
+    def metrics(self, now: float) -> EngineMetrics:
+        return EngineMetrics(
+            engine_id=self.engine_id,
+            kv_usage=min(self.kv_tokens / self.kv_capacity, 1.0),
+            running_load=sum(self.ctx_tokens.values())
+            + sum(r.prompt_len for r in self.waiting),
+            num_running=len(self.running), num_waiting=len(self.waiting),
+            timestamp=now, healthy=True)
+
+    def submit(self, r: Request, now: float) -> None:
+        if r.prompt_tokens is not None:
+            toks = list(np.asarray(r.prompt_tokens).reshape(-1))
+            r._cached = self.prefix.match(toks, now)      # type: ignore
+            self.prefix.insert(toks, now)
+        self.waiting.append(r)
+
+    def iterate(self, now: float, moe_mult: float, cross_frac: float
+                ) -> Tuple[float, List[Request]]:
+        """One continuous-batching iteration starting at `now`.
+        Returns (iteration latency, finished requests)."""
+        # 1) request-level scheduling (Alg. 2 vs FCFS)
+        order = sjf_order(self.waiting, now, self.gcfg) if self.sjf \
+            else fcfs_order(self.waiting, now)
+        budget = self.prefill_budget
+        admitted: List[Request] = []
+        for r in list(order):
+            need = r.prompt_len - getattr(r, "_cached", 0)
+            if need > budget and admitted:
+                break
+            if len(self.running) + len(admitted) >= self.max_running:
+                break
+            if self.kv_tokens + r.prompt_len > self.kv_capacity:
+                break
+            budget -= need
+            admitted.append(r)
+            self.kv_tokens += r.prompt_len
+            self.waiting.remove(r)
+
+        prefill_tokens = sum(r.prompt_len - getattr(r, "_cached", 0)
+                             for r in admitted)
+        decode_batch = len(self.running)
+        avg_ctx = (np.mean([self.ctx_tokens[r.req_id] for r in self.running])
+                   if self.running else 0.0)
+        dt = self.cost.iteration_time(prefill_tokens, decode_batch, avg_ctx,
+                                      moe_mult, cross_frac,
+                                      queue_len=len(self.waiting))
+        end = now + dt
+
+        finished: List[Request] = []
+        for r in admitted:                       # first token produced now
+            r.first_token_time = end
+            r.generated = 1
+            self.ctx_tokens[r.req_id] = r.prompt_len + 1
+            self.running.append(r)
+        for r in list(self.running):
+            if r in admitted:
+                continue
+            r.generated += 1
+            self.ctx_tokens[r.req_id] += 1
+            if r.generated >= r.max_new_tokens:
+                r.finish_time = end
+                finished.append(r)
+                self.running.remove(r)
+                self.kv_tokens -= self.ctx_tokens.pop(r.req_id)
+        return dt, finished
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.running
+
+
+class ExpertState:
+    """Cluster-wide expert placement state (experts are EP-sharded across all
+    engines' devices, §V-A.1) driving (moe_mult, cross_frac)."""
+
+    def __init__(self, cfg: ModelConfig, g: int, policy: str,
+                 gcfg: GimbalConfig, seed: int = 0):
+        self.cfg = cfg
+        self.g = g
+        self.policy = policy            # static | eplb | gimbal
+        self.gcfg = gcfg
+        self.steps = 0
+        self.migrations = 0
+        self.bytes_moved = 0
+        if cfg.is_moe:
+            import jax
+            self.A, self.W, _ = synthetic_stats(
+                jax.random.key(seed), max(cfg.num_moe_layers(), 1),
+                cfg.num_experts, top_k=cfg.moe_top_k)
+            self.perm = static_placement(cfg.num_experts, g)
+            self._update_factors()
+        else:
+            self.moe_mult, self.cross_frac = 1.0, 0.0
+
+    def _update_factors(self) -> None:
+        assign = perm_to_assignment(self.perm, self.g)
+        onehot = np.eye(self.g)[assign]
+        loads = self.A @ onehot                       # (L, g)
+        # hotspot multiplier: hottest device load / mean (per layer, averaged)
+        self.moe_mult = float(np.mean(loads.max(1) / np.maximum(loads.mean(1), 1e-9)))
+        total = self.W.sum()
+        self.cross_frac = float(comm_cut(self.W, assign) / max(total, 1e-9))
+
+    def tick(self, n_steps: int = 1) -> float:
+        """Advance; returns migration latency when a relocation fires."""
+        if not self.cfg.is_moe or self.policy == "static":
+            return 0.0
+        self.steps += n_steps
+        if self.steps < self.gcfg.tau:
+            return 0.0
+        self.steps -= self.gcfg.tau
+        new_perm = (eplb_placement(self.A, self.g) if self.policy == "eplb"
+                    else gimbal_placement(self.A, self.W, self.g))
+        per_expert = 3 * self.cfg.d_model * self.cfg.moe_d_ff * 2 \
+            * max(self.cfg.num_moe_layers(), 1)
+        moved, nbytes = migration_cost(self.perm, new_perm, self.g, per_expert)
+        self.perm = new_perm
+        self._update_factors()
+        self.migrations += 1
+        self.bytes_moved += nbytes
+        return 0.0  # migration overlapped with serving; bytes tracked
+
+
+@dataclasses.dataclass
+class SimResult:
+    report: LatencyReport
+    prefix_hits: int
+    prefix_probed: int
+    moe_mult_final: float
+    cross_frac_final: float
+    migrations: int
+    per_engine_steps: List[int]
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(self.prefix_probed, 1)
+
+
+def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
+             n_engines: int = 2, hw: str | HardwareProfile = "a100",
+             gcfg: Optional[GimbalConfig] = None, seed: int = 0,
+             horizon: Optional[float] = None, prefill_budget: int = 2048,
+             max_running: int = 256, metric_delay: float = 0.05,
+             kv_pool_tokens: int = 0) -> SimResult:
+    """Run one experiment: a trace against one variant (paper §V-A.7)."""
+    gcfg = gcfg or GimbalConfig()
+    hwp = PROFILES[hw] if isinstance(hw, str) else hw
+    flags = variant_flags(variant)
+    router = make_router(variant, list(range(n_engines)), gcfg)
+    bus = MetricsBus(delay=metric_delay)
+    policy = ("gimbal" if flags["edr"] else "static") if cfg.is_moe else "static"
+    if variant == "eplb":                     # extra baseline: count-only EPLB
+        policy = "eplb"
+    experts = ExpertState(cfg, n_engines, policy, gcfg, seed)
+
+    engines = [SimEngine(i, CostModel(cfg, hwp, n_engines), gcfg, flags["sjf"],
+                         prefill_budget=prefill_budget, max_running=max_running,
+                         kv_pool_tokens=kv_pool_tokens)
+               for i in range(n_engines)]
+    reqs = sorted(requests, key=lambda r: r.arrival_time)
+
+    # event loop: arrivals interleaved with per-engine iterations
+    t_engine = [0.0] * n_engines
+    steps = [0] * n_engines
+    i_req = 0
+    finished: List[Request] = []
+    n_total = len(reqs)
+    while len(finished) < n_total:
+        # next event: engine iteration or arrival
+        busy = [(t_engine[e.engine_id], e.engine_id) for e in engines
+                if not e.idle]
+        t_next_eng = min(busy)[0] if busy else float("inf")
+        t_next_arr = reqs[i_req].arrival_time if i_req < n_total else float("inf")
+        if t_next_arr <= t_next_eng:
+            r = reqs[i_req]
+            i_req += 1
+            eid = router.select(r, bus.snapshot(r.arrival_time), r.arrival_time)
+            r.engine_id = eid
+            engines[eid].submit(r, r.arrival_time)
+            t_engine[eid] = max(t_engine[eid], r.arrival_time)
+            continue
+        eid = min(busy)[1]
+        eng = engines[eid]
+        now = t_engine[eid]
+        dt, done = eng.iterate(now, experts.moe_mult, experts.cross_frac)
+        t_engine[eid] = now + dt
+        steps[eid] += 1
+        finished.extend(done)
+        experts.tick()
+        bus.publish(eng.metrics(t_engine[eid]))
+
+    hits = sum(e.prefix.hit_blocks for e in engines)
+    probed = sum(e.prefix.probed_blocks for e in engines)
+    return SimResult(
+        report=summarize(finished, horizon),
+        prefix_hits=hits, prefix_probed=probed,
+        moe_mult_final=experts.moe_mult, cross_frac_final=experts.cross_frac,
+        migrations=experts.migrations, per_engine_steps=steps)

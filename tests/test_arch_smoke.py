@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: every assigned arch (+ the paper's model) at
+a REDUCED same-family config runs one forward/train step on CPU with correct
+output shapes and no NaNs (full configs are exercised only via the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, get_config, get_smoke_config,
+                           list_archs)
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward_and_decode(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.family == get_config(arch).family
+    params = M.init_params(jax.random.key(0), cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["vision_embeds"] = jnp.zeros((B, cfg.vision_prefix_len, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        kw["frames"] = jnp.zeros((B, cfg.encoder_len, cfg.d_model))
+    logits, aux = M.forward_train(params, cfg, toks, **kw)
+    exp_s = S + (cfg.vision_prefix_len if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, exp_s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), f"{arch}: NaN"
+
+    cache = M.init_cache(cfg, B, 32)
+    lg, cache, _ = M.prefill(params, cfg, toks, cache,
+                             **({"frames": kw["frames"]} if cfg.is_encoder_decoder else kw))
+    pos = jnp.full((B,), S, jnp.int32)
+    tok1 = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+    lg2, _, _ = M.decode_step(params, cfg, tok1, cache, pos)
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all(), f"{arch}: decode NaN"
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "qwen3-30b-a3b", "mamba2-370m"])
+def test_smoke_train_step(arch):
+    """One real gradient step on the reduced config (shapes + finiteness)."""
+    from repro.launch.train import train
+    losses = train(arch, steps=2, batch=2, seq=16, smoke=True, log_every=1000)
+    assert all(np.isfinite(losses))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact published dimensions."""
+    cfg = get_config(arch)
+    expect = {
+        "deepseek-v2-236b": dict(num_layers=60, d_model=5120, num_heads=128,
+                                 vocab_size=102400, num_experts=160,
+                                 moe_top_k=6, kv_lora_rank=512,
+                                 num_shared_experts=2, moe_d_ff=1536),
+        "llama4-maverick-400b-a17b": dict(num_layers=48, d_model=5120,
+                                          num_heads=40, num_kv_heads=8,
+                                          vocab_size=202048, num_experts=128,
+                                          moe_top_k=1, moe_d_ff=8192),
+        "internvl2-26b": dict(num_layers=48, d_model=6144, num_heads=48,
+                              num_kv_heads=8, d_ff=16384, vocab_size=92553),
+        "zamba2-1.2b": dict(num_layers=38, d_model=2048, num_heads=32,
+                            num_kv_heads=32, d_ff=8192, vocab_size=32000,
+                            ssm_state=64),
+        "mamba2-370m": dict(num_layers=48, d_model=1024, vocab_size=50280,
+                            ssm_state=128, attention_type="none"),
+        "granite-3-8b": dict(num_layers=40, d_model=4096, num_heads=32,
+                             num_kv_heads=8, d_ff=12800, vocab_size=49155),
+        "granite-20b": dict(num_layers=52, d_model=6144, num_heads=48,
+                            num_kv_heads=1, d_ff=24576, vocab_size=49152),
+        "gemma2-2b": dict(num_layers=26, d_model=2304, num_heads=8,
+                          num_kv_heads=4, d_ff=9216, vocab_size=256000),
+        "qwen2-72b": dict(num_layers=80, d_model=8192, num_heads=64,
+                          num_kv_heads=8, d_ff=29568, vocab_size=152064,
+                          qkv_bias=True),
+        "whisper-medium": dict(num_layers=24, d_model=1024, num_heads=16,
+                               num_kv_heads=16, d_ff=4096, vocab_size=51865,
+                               is_encoder_decoder=True),
+    }[arch]
+    for k, v in expect.items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_param_counts_plausible():
+    """Total parameter counts are in the right ballpark for the headline
+    sizes (sanity that the configs describe the published models)."""
+    bands = {
+        "deepseek-v2-236b": (180e9, 260e9),
+        "llama4-maverick-400b-a17b": (330e9, 440e9),
+        "qwen2-72b": (60e9, 85e9),
+        # granite-20b publishes a non-gated MLP; our uniform SwiGLU block has
+        # 3 FFN matrices (+7.8B at these dims) — the assigned dims are kept
+        "granite-20b": (17e9, 29e9),
+        "gemma2-2b": (2.0e9, 3.5e9),
+        "mamba2-370m": (0.3e9, 0.5e9),
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+        "qwen3-30b-a3b": (25e9, 36e9),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).total_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_active_params_much_smaller_for_moe():
+    for arch in ("deepseek-v2-236b", "llama4-maverick-400b-a17b", "qwen3-30b-a3b"):
+        cfg = get_config(arch)
+        assert cfg.active_params() < 0.2 * cfg.total_params()

@@ -1,0 +1,65 @@
+"""Failure detection + elastic policy unit tests (distributed/fault.py)."""
+from repro.core.types import EngineMetrics
+from repro.distributed.fault import ElasticPolicy, HealthConfig, HealthMonitor
+
+
+def snap(now, *eids, load=0):
+    return {e: EngineMetrics(e, running_load=load, timestamp=now) for e in eids}
+
+
+def test_monitor_declares_dead_after_strikes():
+    cfg = HealthConfig(heartbeat_timeout=1.0, suspect_strikes=2)
+    m = HealthMonitor([0, 1], cfg)
+    m.observe(snap(0.0, 0, 1), 0.0)
+    assert m.check(0.5) == []
+    # engine 1 stops heartbeating
+    m.observe(snap(2.0, 0), 2.0)
+    assert m.check(2.5) == []          # strike 1
+    m.observe(snap(3.0, 0), 3.0)
+    assert m.check(3.5) == [1]         # strike 2 -> dead
+    assert m.check(4.0) == []          # only reported once
+
+
+def test_monitor_recovery_probation():
+    cfg = HealthConfig(heartbeat_timeout=1.0, suspect_strikes=1,
+                       recovery_probation=2.0)
+    m = HealthMonitor([0], cfg)
+    m.observe(snap(0.0, 0), 0.0)
+    assert m.check(2.0) == [0]
+    # heartbeats resume
+    m.observe(snap(2.5, 0), 2.5)
+    assert m.recovered(3.0) == []      # probation not elapsed
+    m.observe(snap(4.1, 0), 4.1)
+    assert m.recovered(4.2) == [0]
+
+
+def test_monitor_elastic_add_remove():
+    m = HealthMonitor([0], HealthConfig())
+    m.add_engine(5, now=1.0)
+    assert 5 in m.last_seen
+    m.remove_engine(0)
+    assert 0 not in m.last_seen
+
+
+def test_elastic_policy_scales_out_on_sustained_pressure():
+    p = ElasticPolicy(out_tokens=100, in_tokens=10, sustain_checks=2)
+    hot = snap(0.0, 0, 1, load=500)
+    assert p.decide(hot) == 0          # first hot check
+    assert p.decide(hot) == +1         # sustained -> scale out
+    assert p.decide(hot) == 0          # counter reset
+
+
+def test_elastic_policy_scales_in_when_idle():
+    p = ElasticPolicy(out_tokens=100, in_tokens=10, sustain_checks=2,
+                      min_engines=1)
+    idle = snap(0.0, 0, 1, load=0)
+    assert p.decide(idle) == 0
+    assert p.decide(idle) == -1
+
+
+def test_elastic_policy_respects_bounds():
+    p = ElasticPolicy(out_tokens=1, sustain_checks=1, max_engines=2)
+    hot = snap(0.0, 0, 1, load=100)
+    assert p.decide(hot) == 0          # already at max_engines
+    p2 = ElasticPolicy(in_tokens=1000, sustain_checks=1, min_engines=1)
+    assert p2.decide(snap(0.0, 0, load=0)) == 0   # already at min

@@ -1,0 +1,101 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.moe_gemm import moe_gemm
+from repro.kernels.topk_router import topk_router
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("e,c,d,f", [(2, 8, 16, 32), (4, 96, 64, 160),
+                                     (1, 200, 128, 96), (8, 128, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gemm_matches_ref(e, c, d, f, dtype):
+    k1, k2 = jax.random.split(jax.random.key(e * 1000 + c))
+    xe = jax.random.normal(k1, (e, c, d), dtype)
+    w = jax.random.normal(k2, (e, d, f), dtype)
+    out = moe_gemm(xe, w, interpret=True)
+    want = ref.ref_moe_gemm(xe, w)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("block", [32, 128])
+def test_moe_gemm_block_shapes(block):
+    xe = jax.random.normal(jax.random.key(0), (3, 70, 48), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (3, 48, 90), jnp.float32)
+    out = moe_gemm(xe, w, block_c=block, block_f=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.ref_moe_gemm(xe, w)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [(2, 4, 4, 64, 16), (3, 8, 2, 300, 32),
+                                          (1, 16, 1, 1024, 64), (4, 8, 8, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_matches_ref(b, hq, hkv, s, d, dtype):
+    ks = jax.random.split(jax.random.key(b * 7 + s), 4)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+    out = flash_decode(q, k, v, lengths, block_s=64, interpret=True)
+    want = ref.ref_flash_decode(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_decode_softcap():
+    ks = jax.random.split(jax.random.key(0), 4)
+    q = jax.random.normal(ks[0], (2, 4, 32), jnp.float32) * 10
+    k = jax.random.normal(ks[1], (2, 100, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 100, 2, 32), jnp.float32)
+    lengths = jnp.asarray([50, 100], jnp.int32)
+    out = flash_decode(q, k, v, lengths, softcap=30.0, interpret=True)
+    want = ref.ref_flash_decode(q, k, v, lengths, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_length_one_attends_first_token_only():
+    """With length=1 the output must equal v[:, 0] per head group."""
+    b, hq, hkv, s, d = 1, 4, 2, 64, 16
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    out = flash_decode(q, k, v, jnp.asarray([1]), interpret=True)
+    want = jnp.repeat(v[:, 0], hq // hkv, axis=1).reshape(b, hq, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("t,e,k", [(64, 8, 1), (500, 16, 2), (1000, 64, 8),
+                                   (128, 128, 6)])
+def test_topk_router_matches_ref(t, e, k):
+    logits = jax.random.normal(jax.random.key(t + e), (t, e), jnp.float32) * 2
+    g, i, p = topk_router(logits, k, block_t=128, interpret=True)
+    gr, ir, pr = ref.ref_topk_router(logits, k)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+
+
+def test_topk_router_positions_cross_block_carry():
+    """Positions keep counting across token blocks (running counter)."""
+    t, e = 256, 4
+    logits = jnp.zeros((t, e)).at[:, 0].set(10.0)   # everyone picks expert 0
+    _, ids, pos = topk_router(logits, 1, block_t=64, interpret=True)
+    assert (np.asarray(ids) == 0).all()
+    np.testing.assert_array_equal(np.asarray(pos).reshape(-1), np.arange(t))
+
+
+def test_topk_router_gates_normalized():
+    logits = jax.random.normal(jax.random.key(9), (200, 32))
+    g, _, _ = topk_router(logits, 4, interpret=True)
+    np.testing.assert_allclose(np.asarray(g).sum(-1), 1.0, rtol=1e-5)

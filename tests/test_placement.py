@@ -1,0 +1,135 @@
+"""Expert-level scheduling (paper Algorithm 3 + MILP Eq. 3-12) tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import (assignment_to_perm, comm_cut, eplb_placement,
+                                  gimbal_placement, migration_cost, milp_exact,
+                                  objective, perm_to_assignment, row_imbalance,
+                                  static_placement)
+
+
+def rand_instance(rng, n=3, m=8, g=2, hot=True):
+    A = rng.random((n, m)) + 0.1
+    if hot:
+        A[:, rng.integers(0, m)] *= 10.0
+    W = rng.random((m, m)) * 0.1
+    np.fill_diagonal(W, 0.0)
+    j, k = rng.choice(m, 2, replace=False)
+    W[j, k] += 5.0
+    return A, W
+
+
+# --- plumbing ----------------------------------------------------------------
+
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(0, 10**6))
+@settings(max_examples=50, deadline=None)
+def test_perm_assignment_roundtrip(g, per, seed):
+    m = g * per
+    rng = np.random.default_rng(seed)
+    assign = np.repeat(np.arange(g), per)
+    rng.shuffle(assign)
+    perm = assignment_to_perm(assign, g)
+    assert sorted(perm) == list(range(m))             # true permutation
+    np.testing.assert_array_equal(perm_to_assignment(perm, g), assign)
+
+
+# --- capacity + anchoring (Alg. 3) ---------------------------------------------
+
+@given(st.integers(0, 10**6), st.integers(2, 4), st.integers(2, 6))
+@settings(max_examples=50, deadline=None)
+def test_gimbal_placement_capacity(seed, g, per):
+    m = g * per
+    rng = np.random.default_rng(seed)
+    A, W = rand_instance(rng, m=m, g=g)
+    perm = gimbal_placement(A, W, g, anchor=0, top_e=4)
+    assign = perm_to_assignment(perm, g)
+    counts = np.bincount(assign, minlength=g)
+    assert (counts == m // g).all()                   # Eq. 4 hard constraint
+
+
+def test_gimbal_placement_anchors_affine_pair():
+    rng = np.random.default_rng(0)
+    A = np.ones((2, 8))
+    W = np.zeros((8, 8))
+    W[2, 5] = 100.0                                   # one strong dependency
+    perm = gimbal_placement(A, W, g=2, anchor=1, top_e=4)
+    assign = perm_to_assignment(perm, 2)
+    assert assign[2] == 1 and assign[5] == 1          # co-located on anchor
+
+
+def test_gimbal_tightens_to_anchor_capacity():
+    """More affinity-linked experts than anchor capacity: strongest pairs win."""
+    A = np.ones((1, 8))
+    W = np.zeros((8, 8))
+    # 3 pairs (6 experts) but capacity is 8/2 = 4
+    W[0, 1] = 100.0
+    W[2, 3] = 50.0
+    W[4, 5] = 10.0
+    perm = gimbal_placement(A, W, g=2, anchor=0, top_e=8)
+    assign = perm_to_assignment(perm, 2)
+    assert assign[0] == 0 and assign[1] == 0          # strongest pair kept
+    assert assign[2] == 0 and assign[3] == 0
+    assert (np.bincount(assign) == 4).all()
+
+
+def test_gimbal_reduces_cut_vs_static():
+    rng = np.random.default_rng(1)
+    A, W = rand_instance(rng, m=16, g=4)
+    cut_static = comm_cut(W, perm_to_assignment(static_placement(16, 4), 4))
+    cut_gimbal = comm_cut(W, perm_to_assignment(gimbal_placement(A, W, 4), 4))
+    assert cut_gimbal <= cut_static + 1e-9
+
+
+def test_eplb_improves_row_balance():
+    rng = np.random.default_rng(2)
+    A, W = rand_instance(rng, n=4, m=16, g=4, hot=True)
+    d_static = row_imbalance(A, perm_to_assignment(static_placement(16, 4), 4), 4)
+    d_eplb = row_imbalance(A, perm_to_assignment(eplb_placement(A, 4), 4), 4)
+    assert d_eplb <= d_static + 1e-9
+
+
+# --- exact MILP oracle ------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_heuristic_within_factor_of_milp(seed):
+    rng = np.random.default_rng(seed)
+    A, W = rand_instance(rng, n=2, m=6, g=2)
+    best_assign, best_val = milp_exact(A, W, g=2, alpha=1.0, beta=1.0)
+    h_assign = perm_to_assignment(gimbal_placement(A, W, 2, top_e=4), 2)
+    h_val = objective(A, W, h_assign, 2, 1.0, 1.0)
+    assert h_val >= best_val - 1e-9                    # oracle is a lower bound
+    assert h_val <= 3.0 * best_val + 1e-6              # heuristic sanity band
+
+
+def test_milp_exact_finds_obvious_optimum():
+    """Two affinity cliques -> optimal bipartition keeps each together."""
+    A = np.ones((1, 4))
+    W = np.zeros((4, 4))
+    W[0, 1] = 10.0
+    W[2, 3] = 10.0
+    assign, val = milp_exact(A, W, g=2, alpha=0.0, beta=1.0)
+    assert assign[0] == assign[1] and assign[2] == assign[3]
+    assert val == 0.0
+
+
+def test_milp_rejects_large_instances():
+    with pytest.raises(ValueError):
+        milp_exact(np.ones((1, 20)), np.zeros((20, 20)), 2)
+
+
+# --- migration accounting -------------------------------------------------------
+
+def test_migration_cost_counts_moved_devices():
+    old = static_placement(8, 2)
+    new_assign = perm_to_assignment(old, 2).copy()
+    new_assign[0], new_assign[7] = new_assign[7], new_assign[0]   # swap devices
+    new = assignment_to_perm(new_assign, 2)
+    moved, nbytes = migration_cost(old, new, 2, bytes_per_expert=1000)
+    assert moved == 2 and nbytes == 2000
+
+
+def test_migration_zero_when_same_assignment():
+    old = static_placement(8, 2)
+    moved, nbytes = migration_cost(old, old.copy(), 2, 1000)
+    assert moved == 0 and nbytes == 0

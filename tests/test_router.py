@@ -1,0 +1,140 @@
+"""Engine-level scheduling (paper Algorithm 1) unit + property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.router import GimbalRouter, RoundRobinRouter
+from repro.core.types import EngineMetrics, GimbalConfig, Request
+
+
+def req(rid=0, plen=100, t=0.0, user=None):
+    return Request(req_id=rid, prompt_len=plen, max_new_tokens=10,
+                   arrival_time=t, user_id=user)
+
+
+def metrics(now, per_engine):
+    return {eid: EngineMetrics(engine_id=eid, kv_usage=kv, running_load=load,
+                               timestamp=now)
+            for eid, (kv, load) in per_engine.items()}
+
+
+def test_round_robin_rotates():
+    r = RoundRobinRouter([0, 1, 2])
+    assert [r.select(req(i), {}) for i in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_rr_skips_unhealthy():
+    r = RoundRobinRouter([0, 1])
+    m = {0: EngineMetrics(0, healthy=False), 1: EngineMetrics(1)}
+    assert all(r.select(req(i), m) == 1 for i in range(4))
+
+
+def test_kv_branch_routes_to_min_kv():
+    """Alg.1 lines 5-7: saturation + imbalance -> min-KV engine."""
+    r = GimbalRouter([0, 1, 2])
+    m = metrics(1.0, {0: (0.95, 5000), 1: (0.5, 100), 2: (0.7, 100)})
+    assert r.select(req(), m, now=1.0) == 1
+
+
+def test_kv_saturated_but_balanced_no_rebalance():
+    """kv >= theta_kv but diff < theta_diff: no KV rebalance, and the load
+    branch is NOT consulted (paper's if/else structure)."""
+    r = GimbalRouter([0, 1])
+    m = metrics(1.0, {0: (0.95, 90000), 1: (0.92, 0)})
+    # diff 0.03 < 0.10 -> falls through to RR default (engine 0 first)
+    assert r.select(req(), m, now=1.0) == 0
+
+
+def test_load_branch_routes_to_min_load():
+    """Alg.1 lines 8-13: below KV saturation, big token-load gap."""
+    r = GimbalRouter([0, 1])
+    m = metrics(1.0, {0: (0.2, 10_000), 1: (0.2, 100)})
+    assert r.select(req(), m, now=1.0) == 1
+
+
+def test_load_gap_below_threshold_uses_rr():
+    r = GimbalRouter([0, 1])
+    m = metrics(1.0, {0: (0.2, 2000), 1: (0.2, 100)})   # gap < 3000
+    picks = [r.select(req(i), m, now=1.0) for i in range(4)]
+    assert picks == [0, 1, 0, 1]
+
+
+def test_user_affinity_sticky_when_balanced():
+    r = GimbalRouter([0, 1])
+    m = metrics(1.0, {0: (0.2, 100), 1: (0.2, 100)})
+    e1 = r.select(req(0, user="alice"), m, now=1.0)
+    for i in range(1, 4):
+        assert r.select(req(i, user="alice"), m, now=1.0 + i) == e1
+
+
+def test_user_affinity_not_applied_during_kv_overuse():
+    """Paper: affinity only when no engine shows KV overuse."""
+    r = GimbalRouter([0, 1])
+    m = metrics(1.0, {0: (0.2, 0), 1: (0.2, 0)})
+    e1 = r.select(req(0, user="bob"), m, now=1.0)
+    other = 1 - e1
+    m2 = metrics(2.0, {e1: (0.97, 0), other: (0.3, 0)})
+    assert r.select(req(1, user="bob"), m2, now=2.0) == other
+
+
+def test_affinity_expires():
+    cfg = GimbalConfig(affinity_ttl=1.0)
+    r = GimbalRouter([0, 1], cfg)
+    m = metrics(0.0, {0: (0.2, 0), 1: (0.2, 0)})
+    e1 = r.select(req(0, user="c"), m, now=0.0)
+    # far beyond TTL: falls back to RR rotation, not necessarily e1
+    m2 = metrics(100.0, {0: (0.2, 0), 1: (0.2, 0)})
+    picks = {r.select(req(i, user=f"u{i}"), m2, now=100.0) for i in range(2)}
+    assert picks == {0, 1}
+
+
+def test_stale_metrics_ignored():
+    cfg = GimbalConfig(metric_staleness=0.5)
+    r = GimbalRouter([0, 1], cfg)
+    m = metrics(0.0, {0: (0.99, 10_000), 1: (0.0, 0)})   # stale at t=10
+    picks = [r.select(req(i), m, now=10.0) for i in range(4)]
+    assert picks == [0, 1, 0, 1]        # treated as "no metric data"
+
+
+def test_inflight_accounting_prevents_herding():
+    """Many arrivals inside one metric period must not all herd onto the
+    engine that looked least loaded in the (stale) snapshot."""
+    r = GimbalRouter([0, 1])
+    m = metrics(1.0, {0: (0.2, 50_000), 1: (0.2, 0)})
+    picks = [r.select(req(i, plen=30_000), m, now=1.0 + 0.001 * i)
+             for i in range(4)]
+    assert picks[0] == 1               # first goes to the idle engine
+    assert 0 in picks                  # in-flight tokens flip later picks
+
+
+def test_elastic_add_remove():
+    r = GimbalRouter([0, 1])
+    r.add_engine(2)
+    m = metrics(1.0, {0: (0.2, 0), 1: (0.2, 0), 2: (0.2, 0)})
+    picks = {r.select(req(i), m, now=1.0) for i in range(6)}
+    assert picks == {0, 1, 2}
+    r.remove_engine(0)
+    picks = {r.select(req(i), m, now=1.0) for i in range(6)}
+    assert 0 not in picks
+
+
+def test_hedge_target():
+    cfg = GimbalConfig(hedge_threshold=1.0)
+    r = GimbalRouter([0, 1, 2], cfg)
+    rq = req(0, t=0.0)
+    rq.engine_id = 0
+    m = metrics(5.0, {0: (0.5, 9000), 1: (0.5, 500), 2: (0.5, 100)})
+    assert r.hedge_target(rq, m, now=5.0) == 2
+    rq2 = req(1, t=4.9)
+    rq2.engine_id = 0
+    assert r.hedge_target(rq2, m, now=5.0) is None   # not waited long enough
+
+
+@given(kv=st.lists(st.floats(0, 1), min_size=2, max_size=8),
+       load=st.lists(st.integers(0, 100_000), min_size=2, max_size=8))
+@settings(max_examples=100, deadline=None)
+def test_select_always_returns_known_engine(kv, load):
+    n = min(len(kv), len(load))
+    r = GimbalRouter(list(range(n)))
+    m = {i: EngineMetrics(i, kv_usage=kv[i], running_load=load[i], timestamp=1.0)
+         for i in range(n)}
+    assert r.select(req(), m, now=1.0) in range(n)

@@ -1,0 +1,122 @@
+"""Workload generators + discrete-event simulator behaviour."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.sim.costmodel import PROFILES, CostModel
+from repro.sim.simulator import simulate
+from repro.workloads.burstgpt import DISTRIBUTIONS, burstgpt_trace
+from repro.workloads.sharegpt import sharegpt_trace
+
+
+# --- traces -----------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", DISTRIBUTIONS)
+def test_burstgpt_distribution_bounds(dist):
+    trace = burstgpt_trace(n=500, distribution=dist, rps=2.0, seed=0)
+    lens = np.array([r.prompt_len for r in trace])
+    assert lens.min() >= 16 and lens.max() <= 6000
+    assert (np.diff([r.arrival_time for r in trace]) >= 0).all()
+
+
+def test_burstgpt_mean_rate_close():
+    trace = burstgpt_trace(n=4000, rps=3.0, seed=1)
+    span = trace[-1].arrival_time - trace[0].arrival_time
+    rate = (len(trace) - 1) / span
+    assert 2.0 < rate < 4.5
+
+
+def test_burstgpt_bursty_has_higher_cv():
+    def cv(b):
+        t = burstgpt_trace(n=4000, rps=2.0, seed=2, burstiness=b)
+        gaps = np.diff([r.arrival_time for r in t])
+        return gaps.std() / gaps.mean()
+    assert cv(4.0) > 1.5 * cv(1.0)
+
+
+def test_burstgpt_distribution_shapes_differ():
+    ms = {}
+    for d in ("central", "two-end"):
+        lens = np.array([r.prompt_len for r in
+                         burstgpt_trace(n=2000, distribution=d, seed=3)])
+        ms[d] = lens.std()
+    assert ms["two-end"] > 1.5 * ms["central"]   # bimodal is wider
+
+
+def test_sharegpt_prefix_grows_per_user():
+    trace = sharegpt_trace(n_requests=60, n_users=3, seed=0, max_context=10_000)
+    by_user = {}
+    for r in trace:
+        by_user.setdefault(r.user_id, []).append(r)
+    for rs in by_user.values():
+        lens = [r.prompt_len for r in rs]
+        assert lens == sorted(lens)              # growing transcript
+        a, b = rs[0].prompt_tokens, rs[1].prompt_tokens
+        assert list(a) == list(b[:len(a)])       # true shared prefix
+
+
+# --- cost model -----------------------------------------------------------------
+
+def test_costmodel_decode_memory_bound():
+    cfg = get_config("qwen3-30b-a3b")
+    cm = CostModel(cfg, PROFILES["a100"], g=2)
+    t_small = cm.decode_time(batch=1, avg_ctx=512)
+    t_big = cm.decode_time(batch=64, avg_ctx=512)
+    assert t_big < 8 * t_small       # batching amortizes weight reads
+    assert cm.prefill_time(4096) > cm.prefill_time(512)
+
+
+def test_costmodel_hotspot_multiplier_hurts():
+    cfg = get_config("qwen3-30b-a3b")
+    cm = CostModel(cfg, PROFILES["a100"], g=2)
+    assert cm.decode_time(32, 512, moe_mult=1.5) > cm.decode_time(32, 512, 1.0)
+    assert cm.prefill_time(2048, moe_mult=1.5) > cm.prefill_time(2048, 1.0)
+
+
+def test_costmodel_v5e_slower_than_a100():
+    cfg = get_config("gemma2-2b")
+    a = CostModel(cfg, PROFILES["a100"], 2).prefill_time(2048)
+    v = CostModel(cfg, PROFILES["v5e"], 2).prefill_time(2048)
+    assert v > a
+
+
+# --- simulator -----------------------------------------------------------------
+
+def _run(variant, trace, **kw):
+    return simulate([copy.copy(r) for r in trace], variant,
+                    get_config("qwen3-30b-a3b"), n_engines=2, hw="a100", **kw)
+
+
+def test_simulator_conserves_requests():
+    trace = burstgpt_trace(n=120, rps=6.0, seed=0)
+    res = _run("vllm", trace)
+    assert res.report.n == 120
+    assert sum(res.per_engine_steps) > 0
+
+
+def test_simulator_gimbal_beats_vllm_under_load():
+    """The paper's headline direction at the saturated operating point."""
+    trace = burstgpt_trace(n=400, rps=10.0, seed=2, burstiness=4.0)
+    v = _run("vllm", trace, kv_pool_tokens=60_000)
+    g = _run("gimbal", trace, kv_pool_tokens=60_000)
+    assert g.report.mean_ttft < v.report.mean_ttft
+
+
+def test_simulator_edr_reduces_cut():
+    from repro.core.types import GimbalConfig
+    trace = burstgpt_trace(n=150, rps=6.0, seed=1)
+    gc = GimbalConfig(tau=200)       # fire well within the trace
+    s = _run("vllm", trace, gcfg=gc)          # static placement
+    e = _run("edr", trace, gcfg=gc)           # gimbal placement after tau steps
+    assert e.migrations >= 1
+    assert e.cross_frac_final <= s.cross_frac_final
+
+
+def test_simulator_dense_arch_has_no_expert_effects():
+    trace = burstgpt_trace(n=60, rps=4.0, seed=0)
+    res = simulate([copy.copy(r) for r in trace], "gimbal",
+                   get_config("granite-3-8b"), n_engines=2, hw="a100")
+    assert res.moe_mult_final == 1.0 and res.migrations == 0
+    assert res.report.n == 60

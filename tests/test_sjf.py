@@ -1,0 +1,88 @@
+"""Request-level scheduling (paper Algorithm 2) unit + property tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sjf import SJFQueue, fcfs_order, sjf_order
+from repro.core.types import GimbalConfig, Request
+
+
+def req(rid, plen, t=0.0):
+    return Request(req_id=rid, prompt_len=plen, max_new_tokens=8, arrival_time=t)
+
+
+def test_sjf_orders_by_prefill_length():
+    rs = [req(0, 500), req(1, 10), req(2, 100)]
+    out = sjf_order(rs, now=0.1)
+    assert [r.req_id for r in out] == [1, 2, 0]
+
+
+def test_fcfs_orders_by_arrival():
+    rs = [req(0, 500, 2.0), req(1, 10, 3.0), req(2, 900, 1.0)]
+    assert [r.req_id for r in fcfs_order(rs, 3.0)] == [2, 0, 1]
+
+
+def test_aging_promotes_starved_request():
+    """w_r >= theta_age -> high priority regardless of size (Alg.2 lines 3-4)."""
+    rs = [req(0, 10, t=9.0), req(1, 99_999, t=0.0)]
+    out = sjf_order(rs, now=10.0, cfg=GimbalConfig(theta_age=5.0))
+    assert out[0].req_id == 1 and out[0].aged
+    assert not out[1].aged
+
+
+def test_aged_ties_break_by_arrival():
+    rs = [req(0, 10, t=1.0), req(1, 99, t=0.0)]
+    out = sjf_order(rs, now=100.0)
+    assert [r.req_id for r in out] == [1, 0]
+
+
+@given(st.lists(st.tuples(st.integers(1, 10_000), st.floats(0, 4.9)),
+                min_size=1, max_size=50))
+@settings(max_examples=100, deadline=None)
+def test_sjf_property_sorted_when_no_aging(items):
+    """With all waits below theta_age, output is sorted by prompt length."""
+    rs = [req(i, plen, t=5.0 - w) for i, (plen, w) in enumerate(items)]
+    out = sjf_order(rs, now=5.0, cfg=GimbalConfig(theta_age=5.0))
+    lens = [r.prompt_len for r in out]
+    assert lens == sorted(lens)
+    assert {r.req_id for r in out} == {r.req_id for r in rs}  # permutation
+
+
+@given(st.lists(st.tuples(st.integers(1, 10_000), st.floats(0, 20)),
+                min_size=1, max_size=50))
+@settings(max_examples=100, deadline=None)
+def test_sjf_property_aged_always_first(items):
+    rs = [req(i, plen, t=20.0 - w) for i, (plen, w) in enumerate(items)]
+    out = sjf_order(rs, now=20.0, cfg=GimbalConfig(theta_age=5.0))
+    flags = [r.aged for r in out]
+    # all aged requests appear before all non-aged ones
+    assert flags == sorted(flags, reverse=True)
+
+
+def test_queue_pop_respects_budget():
+    q = SJFQueue(policy="sjf")
+    for i, plen in enumerate([400, 100, 300, 50]):
+        q.push(req(i, plen))
+    popped = q.pop_next(now=0.0, budget_tokens=200)
+    assert [r.prompt_len for r in popped] == [50, 100]
+    assert len(q) == 2
+
+
+def test_queue_admits_oversized_head_alone():
+    q = SJFQueue(policy="sjf")
+    q.push(req(0, 5000))
+    popped = q.pop_next(now=0.0, budget_tokens=100)
+    assert len(popped) == 1 and popped[0].prompt_len == 5000
+
+
+def test_queue_fcfs_mode():
+    q = SJFQueue(policy="fcfs")
+    q.push(req(0, 500, 1.0))
+    q.push(req(1, 10, 2.0))
+    assert q.pop_next(now=3.0)[0].req_id == 0
+
+
+def test_waiting_tokens():
+    q = SJFQueue()
+    q.extend([req(0, 100), req(1, 250)])
+    assert q.waiting_tokens == 350
+    q.drain()
+    assert q.waiting_tokens == 0

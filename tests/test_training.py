@@ -1,0 +1,164 @@
+"""Training substrate: optimizer, loss descent, checkpoint/restart, data
+determinism, gradient compression."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.compression import (TopKState, dequantize_int8,
+                                        quantize_int8, topk_compress,
+                                        topk_init)
+from repro.training.data import DataConfig, TokenStream, pack_documents
+from repro.training.optimizer import (AdamWConfig, adamw_update, global_norm,
+                                      init_adamw, lr_schedule)
+
+
+# --- optimizer -----------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      moment_dtype="float32", grad_clip=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_adamw(params, cfg)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}          # d/dw ||w||^2
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1e-3, grad_clip=1.0, moment_dtype="float32")
+    params = {"w": jnp.zeros(4)}
+    state = init_adamw(params, cfg)
+    huge = {"w": jnp.full(4, 1e9)}
+    _, _, m = adamw_update(params, huge, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(2e9, rel=1e-3)
+    # post-clip norm used in the update is bounded -> params move <= lr-ish
+    p2, _, _ = adamw_update(params, huge, state, cfg)
+    assert float(jnp.abs(p2["w"]).max()) < 1.0
+
+
+def test_lr_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, decay_steps=110, min_lr_frac=0.1)
+    assert float(lr_schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(lr_schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr_schedule(cfg, jnp.asarray(110))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_train_loop_loss_decreases(tmp_path):
+    from repro.launch.train import train
+    losses = train("gemma2-2b", steps=30, batch=4, seq=32, smoke=True,
+                   log_every=1000)
+    assert losses[-1] < losses[0]
+
+
+def test_train_resume_matches_uninterrupted(tmp_path):
+    """Fault-tolerance contract: crash + restore reproduces the exact loss
+    trajectory (deterministic data + atomic checkpoints)."""
+    from repro.launch.train import train
+    d1 = tmp_path / "a"
+    full = train("granite-3-8b", steps=8, batch=2, seq=16, smoke=True,
+                 ckpt_dir=str(d1), ckpt_every=100, log_every=1000, seed=3)
+    d2 = tmp_path / "b"
+    train("granite-3-8b", steps=4, batch=2, seq=16, smoke=True,
+          ckpt_dir=str(d2), ckpt_every=4, log_every=1000, seed=3)
+    resumed = train("granite-3-8b", steps=8, batch=2, seq=16, smoke=True,
+                    ckpt_dir=str(d2), ckpt_every=100, log_every=1000, seed=3)
+    np.testing.assert_allclose(resumed[-1], full[-1], rtol=1e-4)
+
+
+# --- checkpoint ---------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+             "b": [jnp.ones(4, jnp.bfloat16), jnp.zeros((), jnp.int32)]}
+    save_checkpoint(tmp_path, 7, state)
+    assert latest_step(tmp_path) == 7
+    step, restored = restore_checkpoint(tmp_path, state)
+    assert step == 7
+    for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+        assert x.dtype == y.dtype
+
+
+def test_checkpoint_gc_keeps_newest(tmp_path):
+    state = {"w": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        save_checkpoint(tmp_path, s, state, keep=2)
+    assert latest_step(tmp_path) == 4
+    kept = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(kept) == 2
+
+
+def test_checkpoint_ignores_incomplete(tmp_path):
+    state = {"w": jnp.zeros(2)}
+    save_checkpoint(tmp_path, 1, state)
+    # simulate a crash mid-save: directory without manifest
+    broken = tmp_path / "step_00000009"
+    broken.mkdir()
+    (broken / "leaf_00000.npy").write_bytes(b"junk")
+    assert latest_step(tmp_path) == 1
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.zeros(2)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, {"w": jnp.zeros(3)})
+
+
+# --- data -----------------------------------------------------------------------
+
+def test_data_deterministic_and_shifted():
+    cfg = DataConfig(vocab_size=100, global_batch=4, seq_len=16, seed=1)
+    s1, s2 = TokenStream(cfg), TokenStream(cfg)
+    b1, b2 = s1.batch_at(5), s2.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    assert not np.array_equal(s1.batch_at(5)["tokens"], s1.batch_at(6)["tokens"])
+
+
+def test_data_hosts_disjoint():
+    kw = dict(vocab_size=1000, global_batch=8, seq_len=32, seed=0, num_hosts=2)
+    b0 = TokenStream(DataConfig(host_id=0, **kw)).batch_at(0)
+    b1 = TokenStream(DataConfig(host_id=1, **kw)).batch_at(0)
+    assert b0["tokens"].shape == (4, 32)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_pack_documents_fits():
+    lens = [100, 200, 50, 300, 120, 80]
+    assign, rows = pack_documents(lens, seq_len=512)
+    assert rows <= 3
+    per_row = {}
+    for ln, r in zip(lens, assign):
+        per_row[r] = per_row.get(r, 0) + min(ln, 512)
+    assert all(v <= 512 for v in per_row.values())
+
+
+# --- compression -----------------------------------------------------------------
+
+def test_topk_error_feedback_preserves_mass():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=256), jnp.float32)}
+    st = topk_init(g)
+    sent, st = topk_compress(g, st, frac=0.1)
+    nz = int((np.asarray(sent["w"]) != 0).sum())
+    assert nz == 25 or nz == 26
+    # residual + sent == original (error feedback invariant)
+    np.testing.assert_allclose(np.asarray(sent["w"]) + np.asarray(st.residual["w"]),
+                               np.asarray(g["w"]), rtol=1e-6)
+    # a second step re-sends accumulated residual eventually
+    zero = {"w": jnp.zeros(256)}
+    sent2, st2 = topk_compress(zero, st, frac=1.0)
+    np.testing.assert_allclose(np.asarray(sent2["w"]),
+                               np.asarray(st.residual["w"]), rtol=1e-6)
+
+
+def test_int8_quantization_bounded_error():
+    g = jnp.asarray(np.random.default_rng(1).normal(size=512), jnp.float32)
+    q, scale = quantize_int8(g)
+    back = dequantize_int8(q, scale)
+    assert float(jnp.abs(back - g).max()) <= float(scale) * 0.51 + 1e-6
