@@ -13,8 +13,9 @@ def main() -> int:
                     help="single rate / fewer seeds (CI mode)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_expert_balance, bench_kernels, bench_prefix,
-                            bench_throughput, bench_tpot, bench_ttft, roofline)
+    from benchmarks import (bench_expert_balance, bench_kernels,
+                            bench_preemption, bench_prefix, bench_throughput,
+                            bench_tpot, bench_ttft, roofline)
     from benchmarks.common import ResultCache
 
     cache = ResultCache()
@@ -23,6 +24,7 @@ def main() -> int:
         ("bench_tpot (Figs. 8-9)", bench_tpot),
         ("bench_throughput (Fig. 10)", bench_throughput),
         ("bench_prefix (Figs. 11-12)", bench_prefix),
+        ("bench_preemption (mixed-priority, beyond-paper)", bench_preemption),
         ("bench_expert_balance (Figs. 3-4)", bench_expert_balance),
         ("bench_kernels (infra)", bench_kernels),
         ("roofline (SS Roofline, from dry-run artifacts)", roofline),

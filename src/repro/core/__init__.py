@@ -1,6 +1,9 @@
-from repro.core.types import EngineMetrics, GimbalConfig, Request
+from repro.core.types import (PRIORITY_CLASSES, EngineMetrics, GimbalConfig,
+                              Request, class_rank)
 from repro.core.router import GimbalRouter, RoundRobinRouter
 from repro.core.sjf import SJFQueue, fcfs_order, sjf_order
+from repro.core.preempt import (VICTIM_POLICIES, eligible_victims,
+                                reset_for_resume, select_victim)
 from repro.core.affinity import AffinityTracker, accumulate_stats, synthetic_stats
 from repro.core.placement import (assignment_to_perm, comm_cut, eplb_placement,
                                   gimbal_placement, migration_cost, milp_exact,
@@ -10,9 +13,10 @@ from repro.core.eplb import ExpertRebalancer, RebalanceEvent
 from repro.core.gimbal import VARIANTS, make_queue, make_rebalancer, make_router, variant_flags
 
 __all__ = [
-    "EngineMetrics", "GimbalConfig", "Request",
+    "PRIORITY_CLASSES", "EngineMetrics", "GimbalConfig", "Request", "class_rank",
     "GimbalRouter", "RoundRobinRouter",
     "SJFQueue", "fcfs_order", "sjf_order",
+    "VICTIM_POLICIES", "eligible_victims", "reset_for_resume", "select_victim",
     "AffinityTracker", "accumulate_stats", "synthetic_stats",
     "assignment_to_perm", "comm_cut", "eplb_placement", "gimbal_placement",
     "migration_cost", "milp_exact", "objective", "perm_to_assignment",

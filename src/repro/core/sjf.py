@@ -18,11 +18,16 @@ def fcfs_order(waiting: Sequence[Request], now: float) -> List[Request]:
 
 def sjf_order(waiting: Sequence[Request], now: float,
               cfg: GimbalConfig | None = None) -> List[Request]:
-    """Algorithm 2: assign priorities, sort ascending, return the new queue.
+    """Algorithm 2 extended with priority classes: assign priorities, sort
+    ascending, return the new queue.
 
-    Aged requests (w_r >= theta_age) get priority -1 ("high"); ties among aged
-    requests break by arrival (oldest first).  Everyone else is keyed on
-    prompt length; ties break by arrival then id for determinism.
+    Aged requests (w_r >= theta_age) get priority -1 ("high") and jump ahead
+    of EVERY class — the starvation guard outranks class so preempted batch
+    work eventually runs; ties among aged requests break by arrival (oldest
+    first).  Everyone else sorts by (class rank, prompt length): interactive
+    before batch, shortest prefill first within a class; ties break by
+    arrival then id for determinism.  With all requests in the default class
+    this reduces exactly to the paper's Algorithm 2.
     """
     cfg = cfg or GimbalConfig()
     out = []
@@ -35,8 +40,9 @@ def sjf_order(waiting: Sequence[Request], now: float,
             r.priority = float(r.prompt_len)            # line 6
             r.aged = False
         out.append(r)
-    # line 9: sort by priority ascending (aged first, then shortest prefill)
-    return sorted(out, key=lambda r: (r.priority, r.arrival_time, r.req_id))
+    # line 9: sort ascending (aged first, then by class, then shortest prefill)
+    return sorted(out, key=lambda r: (-1 if r.aged else r.rank,
+                                      r.priority, r.arrival_time, r.req_id))
 
 
 class SJFQueue:
@@ -58,6 +64,11 @@ class SJFQueue:
 
     def push(self, r: Request) -> None:
         self._items.append(r)
+
+    def remove(self, r: Request) -> None:
+        """Pull a specific request out of the queue (engine preemption hands
+        its beneficiary a slot directly, bypassing pop_next)."""
+        self._items.remove(r)
 
     def extend(self, rs: Sequence[Request]) -> None:
         self._items.extend(rs)

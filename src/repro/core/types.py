@@ -4,6 +4,18 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+# Priority classes, ordered most- to least-urgent.  Rank 0 (interactive)
+# may preempt rank 1 (batch) when GimbalConfig.enable_preemption is set.
+PRIORITY_CLASSES = ("interactive", "batch")
+
+
+def class_rank(priority_class: str) -> int:
+    """Smaller rank == more urgent.  Unknown classes sort after known ones."""
+    try:
+        return PRIORITY_CLASSES.index(priority_class)
+    except ValueError:
+        return len(PRIORITY_CLASSES)
+
 
 @dataclasses.dataclass
 class Request:
@@ -14,6 +26,7 @@ class Request:
     arrival_time: float
     user_id: Optional[str] = None    # enables Alg.1 user affinity
     prompt_tokens: Optional[object] = None  # actual tokens (functional plane only)
+    priority_class: str = "batch"    # see PRIORITY_CLASSES
 
     # lifecycle (filled in by the engine / simulator)
     engine_id: Optional[int] = None
@@ -22,6 +35,12 @@ class Request:
     generated: int = 0
     priority: float = 0.0
     aged: bool = False
+    preempted: int = 0               # times this request lost its decode slot
+    wasted_tokens: int = 0           # generated tokens discarded by preemption
+
+    @property
+    def rank(self) -> int:
+        return class_rank(self.priority_class)
 
     @property
     def ttft(self) -> Optional[float]:
@@ -73,3 +92,7 @@ class GimbalConfig:
     enable_edr: bool = True
     # straggler mitigation (beyond-paper, required for 1000+ node runs)
     hedge_threshold: float = 0.0     # >0: re-dispatch if queued longer than this
+    # preemptive priority scheduling (beyond-paper, mixed-tenant workloads)
+    enable_preemption: bool = False  # interactive may evict running batch work
+    victim_policy: str = "fewest_tokens"  # fewest_tokens | lowest_class | lru_slot
+    max_preemptions: int = 3         # per-request eviction cap (livelock guard)

@@ -1,0 +1,7 @@
+"""Pallas API compatibility across jax versions."""
+import jax.experimental.pallas.tpu as pltpu
+
+try:
+    CompilerParams = pltpu.CompilerParams          # jax >= 0.5
+except AttributeError:
+    CompilerParams = pltpu.TPUCompilerParams       # jax < 0.5 naming

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_INF = -2.0 ** 30
 
 
@@ -91,7 +93,7 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
             pltpu.VMEM((g, 1), jnp.float32),         # l
             pltpu.VMEM((g, d), jnp.float32),         # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, qg, k, v)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, w_ref, o_ref):
     x = x_ref[0]                                   # (BC, D)
@@ -53,7 +55,7 @@ def moe_gemm(xe: jax.Array, w: jax.Array, *, block_c: int = 128,
         ],
         out_specs=pl.BlockSpec((1, bc, bf), lambda ei, ci, fi: (ei, ci, fi)),
         out_shape=jax.ShapeDtypeStruct((e, cp, fp), xe.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(xe, w)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 NEG_INF = -2.0 ** 30
 
 
@@ -89,7 +91,7 @@ def topk_router(logits: jax.Array, k: int, *, block_t: int = 1024,
             jax.ShapeDtypeStruct((tp, k), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((1, e), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(logits)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.distributed.context import current_ctx, divides
+from repro.distributed.context import current_ctx, divides, shard_map_compat
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, rms_norm, softcap
 
@@ -306,7 +306,7 @@ def _gqa_decode_seqsharded(cfg: ModelConfig, q, k_new, v_new, cache, cache_pos,
 
     rep4 = P(b_ax, None, None, None)
     shard4 = P(b_ax, ctx.model_axis, None, None)
-    return jax.shard_map(
+    return shard_map_compat(
         body, mesh=ctx.mesh,
         in_specs=(rep4, rep4, rep4, shard4, shard4, P(b_ax)),
         out_specs=(rep4, shard4, shard4),
@@ -526,7 +526,7 @@ def _mla_decode_seqsharded(cfg: ModelConfig, params, q_nope, q_rope, ckv_new,
     rep3 = P(b_ax, None, None)
     rep4 = P(b_ax, None, None, None)
     shard3 = P(b_ax, ctx.model_axis, None)
-    return jax.shard_map(
+    return shard_map_compat(
         body, mesh=ctx.mesh,
         in_specs=(rep4, rep4, rep4, rep3, rep3, shard3, shard3, P(b_ax),
                   P(None, None, None)),

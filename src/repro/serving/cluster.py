@@ -19,7 +19,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.core.gimbal import make_router
 from repro.core.types import GimbalConfig, Request
 from repro.serving.engine import Engine
-from repro.serving.metrics import MetricsBus, summarize
+from repro.serving.metrics import MetricsBus, summarize, summarize_by_class
 
 
 class Cluster:
@@ -81,7 +81,7 @@ class Cluster:
                 if tgt is not None and tgt != e.engine_id:
                     moves.append((e, r, tgt))
         for e, r, tgt in moves:
-            e.queue._items.remove(r)
+            e.queue.remove(r)
             r.engine_id = tgt
             r._hedged_at = now
             self.engines[tgt].submit(r, now)
@@ -109,6 +109,13 @@ class Cluster:
     # ------------------------------------------------------------------ reporting
     def report(self, horizon: Optional[float] = None):
         return summarize(self.finished, horizon)
+
+    def report_by_class(self, horizon: Optional[float] = None):
+        """Per-priority-class latency breakdown (mixed-tenant view)."""
+        return summarize_by_class(self.finished, horizon)
+
+    def preemption_stats(self) -> Dict[str, int]:
+        return {"preemptions": sum(e.preemptions for e in self.engines.values())}
 
     def prefix_stats(self) -> Dict[str, float]:
         hits = sum(e.prefix.hit_blocks for e in self.engines.values())

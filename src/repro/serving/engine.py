@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core.eplb import ExpertRebalancer
 from repro.core.gimbal import make_queue, make_rebalancer
+from repro.core.preempt import reset_for_resume, select_victim
 from repro.core.types import EngineMetrics, GimbalConfig, Request
 from repro.models import config as mcfg
 from repro.models import model as M
@@ -55,8 +56,10 @@ class Engine:
         self.max_seq = max_seq
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.slot_last_token = np.zeros(max_slots, np.int32)
+        self.slot_admit_time = np.zeros(max_slots, np.float64)
         self.steps = 0
         self.relocations = 0
+        self.preemptions = 0
 
         self._n_scan = model_cfg.num_moe_layers()
         self._jit_decode = jax.jit(self._decode_fn)
@@ -112,21 +115,27 @@ class Engine:
         if not self.healthy:
             return []
         finished: List[Request] = []
-        # 1) admission under the chunked-prefill token budget
-        budget = self.prefill_budget
-        while self.kv.num_free > 0 and len(self.queue) > 0 and budget > 0:
+        # 0) priority preemption: evict lower-class running work for urgent
+        # waiting requests, prefilling each beneficiary straight into the
+        # freed slot.  Victims are re-queued only AFTER admission: an evicted
+        # long-runner counts as aged in the reorder (aging outranks class)
+        # and would otherwise win a freed slot right back, starving the
+        # request the eviction was for.
+        victims, budget = self.preempt(now)
+        # 1) admission under the remaining chunked-prefill token budget.  A
+        # single pop_next call admits every head that fits cumulatively;
+        # re-popping with the shrunk budget would re-trigger the admit-alone
+        # rule each time and overrun the budget by one oversized head per call.
+        if self.kv.num_free > 0 and len(self.queue) > 0 and budget > 0:
             admitted = self.queue.pop_next(now, budget)
-            if not admitted:
-                break
             for j, r in enumerate(admitted):
                 slot = self.kv.alloc()
                 if slot is None:
                     # out of slots: re-queue this and every remaining popped request
                     self.queue.extend(admitted[j:])
-                    budget = 0
                     break
                 self._prefill_into(r, slot, now)
-                budget -= r.prompt_len
+        self.queue.extend(victims)
         # 2) one decode step over all slots
         if self.num_active() > 0:
             finished.extend(self._decode_all(now))
@@ -138,7 +147,72 @@ class Engine:
                 self._apply_placement()
         return finished
 
+    # ------------------------------------------------------------------ preemption
+    def preempt(self, now: float) -> "tuple[List[Request], int]":
+        """Evict lower-class running requests so more urgent waiting requests
+        get decode slots (GimbalConfig.enable_preemption).  Victims lose their
+        KV slot, get their generation state reset for recompute-on-resume
+        (same reset as drain_all; greedy decode regenerates identical tokens),
+        and are RETURNED rather than re-queued — the caller re-queues them
+        after admission, so a same-step victim can never win a slot back.
+
+        The scan mirrors pop_next's cumulative budget (including the
+        oversized-head-alone rule), so it never evicts for a request
+        admission couldn't take this step, and each beneficiary is prefilled
+        straight into the slot its victim freed — admission order would
+        otherwise hand that slot to an earlier (e.g. aged batch) waiter,
+        turning the eviction into equal-class preemption through the side
+        door.  Returns (victims, prefill budget remaining for admission)."""
+        budget = self.prefill_budget
+        victims: List[Request] = []
+        if not self.gcfg.enable_preemption:
+            return victims, budget
+        waiting = self.queue.reorder(now)
+        free = self.kv.num_free
+        used = 0     # cumulative prefill tokens of waiters SEATED this step:
+        #              free-slot takers and evict-beneficiaries.  A waiter that
+        #              gets neither seat nor victim charges nothing — it can't
+        #              run this step and must not shield urgent waiters behind
+        #              it (budget-wise or slot-wise).
+        for w in waiting:
+            oversized = used == 0 and w.prompt_len > self.prefill_budget
+            if used + w.prompt_len > self.prefill_budget and not oversized:
+                break              # cumulative budget exhausted for this step
+            seated = False
+            if free > 0:
+                free -= 1          # w can take an already-free slot
+                used += w.prompt_len
+                seated = True
+            else:
+                running = [(i, r) for i, r in enumerate(self.slot_req)
+                           if r is not None]
+                pick = select_victim(running, w.rank, self.gcfg,
+                                     admit_order=[self.slot_admit_time[i]
+                                                  for i, _ in running])
+                # no victim for THIS class: keep scanning — an aged batch
+                # head must not shield running work from an urgent waiter
+                if pick is not None:
+                    slot, victim = pick
+                    self._release_slot(slot)
+                    reset_for_resume(victim)
+                    victims.append(victim)
+                    self.preemptions += 1
+                    self.queue.remove(w)
+                    self._prefill_into(w, self.kv.alloc(), now)
+                    budget -= w.prompt_len
+                    used += w.prompt_len
+                    seated = True
+            if oversized and seated:
+                break              # admit-alone: nothing else fits this step
+            # an unseated oversized head charges nothing and must not shield
+            # urgent waiters behind it — keep scanning
+        return victims, budget
+
     # ------------------------------------------------------------------ internals
+    def _release_slot(self, slot: int) -> None:
+        self.slot_req[slot] = None
+        self.kv.free(slot)
+
     def _prefill_into(self, r: Request, slot: int, now: float) -> None:
         plen = min(r.prompt_len, self.max_seq - 1)
         if r.prompt_tokens is not None:
@@ -158,6 +232,7 @@ class Engine:
         self.slot_req[slot] = r
         self.kv.slot_len[slot] = plen
         self.slot_last_token[slot] = first
+        self.slot_admit_time[slot] = now
         r.engine_id = self.engine_id
         r.first_token_time = now
         r.generated = 1
@@ -186,8 +261,7 @@ class Engine:
             if done:
                 r.finish_time = now
                 finished.append(r)
-                self.slot_req[i] = None
-                self.kv.free(i)
+                self._release_slot(i)
         if (self.rebalancer is not None and "expert_ids" in aux and active_rows):
             ids = np.asarray(aux["expert_ids"])          # (L, B, 1, K)
             self.rebalancer.observe(ids[:, active_rows])
@@ -232,6 +306,5 @@ class Engine:
                 r.generated = 0
                 r.engine_id = None
                 out.append(r)
-                self.slot_req[i] = None
-                self.kv.free(i)
+                self._release_slot(i)
         return out

@@ -45,6 +45,8 @@ class LatencyReport:
     p99_tpot: float
     throughput_tok_s: float
     throughput_req_s: float
+    preemptions: int = 0             # total slot evictions suffered
+    wasted_tokens: int = 0           # generated tokens discarded by preemption
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -69,4 +71,17 @@ def summarize(requests: Sequence[Request], horizon: Optional[float] = None) -> L
         p99_tpot=float(np.percentile(tpots, 99)) if tpots else float("nan"),
         throughput_tok_s=tokens / span,
         throughput_req_s=len(done) / span,
+        preemptions=sum(r.preempted for r in done),
+        wasted_tokens=sum(r.wasted_tokens for r in done),
     )
+
+
+def summarize_by_class(requests: Sequence[Request],
+                       horizon: Optional[float] = None
+                       ) -> Dict[str, LatencyReport]:
+    """Per-priority-class TTFT/TPOT breakdown (mixed-tenant evaluation):
+    one LatencyReport per priority_class present in `requests`."""
+    by_class: Dict[str, List[Request]] = {}
+    for r in requests:
+        by_class.setdefault(r.priority_class, []).append(r)
+    return {c: summarize(rs, horizon) for c, rs in sorted(by_class.items())}

@@ -30,10 +30,14 @@ from repro.core.gimbal import make_router, variant_flags
 from repro.core.placement import (comm_cut, eplb_placement, gimbal_placement,
                                   migration_cost, perm_to_assignment,
                                   row_imbalance, static_placement)
+from repro.core.preempt import (eligible_victims, reset_for_resume,
+                                select_victim)
 from repro.core.sjf import fcfs_order, sjf_order
-from repro.core.types import EngineMetrics, GimbalConfig, Request
+from repro.core.types import (PRIORITY_CLASSES, EngineMetrics, GimbalConfig,
+                              Request)
 from repro.models.config import ModelConfig
-from repro.serving.metrics import LatencyReport, MetricsBus, summarize
+from repro.serving.metrics import (LatencyReport, MetricsBus, summarize,
+                                   summarize_by_class)
 from repro.serving.prefix_cache import PrefixCache
 from repro.sim.costmodel import CostModel, HardwareProfile, PROFILES
 
@@ -57,6 +61,7 @@ class SimEngine:
         # vLLM's prefix cache IS the KV block pool: bound + LRU-churn it
         self.prefix = PrefixCache(capacity_blocks=max(self.kv_capacity // 16, 256))
         self.kv_tokens = 0
+        self.preemptions = 0
 
     # --- metrics (Alg. 1 inputs) ---------------------------------------------
     def metrics(self, now: float) -> EngineMetrics:
@@ -75,6 +80,39 @@ class SimEngine:
             self.prefix.insert(toks, now)
         self.waiting.append(r)
 
+    def _blocked(self, r: Request, n_admitted: int) -> bool:
+        """Admission blocked for `r` under the batch/KV-capacity limits."""
+        return (len(self.running) + n_admitted >= self.max_running
+                or self.kv_tokens + r.prompt_len > self.kv_capacity)
+
+    def _eviction_unblocks(self, r: Request, n_admitted: int) -> bool:
+        """True iff evicting every preemptible victim would make `r` fit —
+        the feasibility gate before destroying any batch progress."""
+        evictable = [v for _, v in eligible_victims(
+            [(None, x) for x in self.running], r.rank, self.gcfg)]
+        kv_after = self.kv_tokens - sum(self.ctx_tokens[v.req_id]
+                                        for v in evictable)
+        run_after = len(self.running) - len(evictable) + n_admitted
+        return (run_after < self.max_running
+                and kv_after + r.prompt_len <= self.kv_capacity)
+
+    def _evict_for(self, rank: int) -> Optional[Request]:
+        """Evict one running request preemptible by class `rank`, returning
+        it to the waiting queue with KV released and generation state reset
+        (recompute-on-resume; the conservative `_cached = 0` re-charges the
+        full prefill)."""
+        pick = select_victim([(None, r) for r in self.running], rank, self.gcfg)
+        if pick is None:
+            return None
+        v = pick[1]
+        self.running.remove(v)
+        self.kv_tokens -= self.ctx_tokens.pop(v.req_id)
+        reset_for_resume(v)
+        v._cached = 0                                   # type: ignore
+        self.waiting.append(v)
+        self.preemptions += 1
+        return v
+
     def iterate(self, now: float, moe_mult: float, cross_frac: float
                 ) -> Tuple[float, List[Request]]:
         """One continuous-batching iteration starting at `now`.
@@ -84,13 +122,38 @@ class SimEngine:
             else fcfs_order(self.waiting, now)
         budget = self.prefill_budget
         admitted: List[Request] = []
+        blocked_rank = len(PRIORITY_CLASSES) + 1   # most-urgent rank blocked so far
         for r in list(order):
+            # head-blocking per class: once a request of some rank is blocked
+            # (on KV, batch size, OR budget), equal-or-less-urgent requests
+            # behind it may not leapfrog it and steal what it is waiting for
+            if r.rank >= blocked_rank:
+                continue
             need = r.prompt_len - getattr(r, "_cached", 0)
             if need > budget and admitted:
+                if self.gcfg.enable_preemption:
+                    # budget-blocked head: strictly-more-urgent requests
+                    # behind it may still be scanned (symmetric with the
+                    # KV/batch-blocked case below)
+                    blocked_rank = min(blocked_rank, r.rank)
+                    continue
                 break
-            if len(self.running) + len(admitted) >= self.max_running:
-                break
-            if self.kv_tokens + r.prompt_len > self.kv_capacity:
+            # priority preemption: evict lower-class running work to make
+            # room, but only for requests admissible this iteration (budget-
+            # gated above) and only when eviction can actually unblock r —
+            # otherwise batch progress is destroyed for zero benefit
+            if (self.gcfg.enable_preemption
+                    and self._blocked(r, len(admitted))
+                    and self._eviction_unblocks(r, len(admitted))):
+                while (self._blocked(r, len(admitted))
+                       and self._evict_for(r.rank) is not None):
+                    pass
+            if self._blocked(r, len(admitted)):
+                if self.gcfg.enable_preemption:
+                    # keep scanning: a strictly-more-urgent request behind a
+                    # blocked (e.g. aged-batch) head must reach its victims
+                    blocked_rank = min(blocked_rank, r.rank)
+                    continue
                 break
             budget -= need
             admitted.append(r)
@@ -112,12 +175,14 @@ class SimEngine:
             r.first_token_time = end
             r.generated = 1
             self.ctx_tokens[r.req_id] = r.prompt_len + 1
+            self.kv_tokens += 1                  # keep kv_tokens == sum(ctx)
             self.running.append(r)
         for r in list(self.running):
             if r in admitted:
                 continue
             r.generated += 1
             self.ctx_tokens[r.req_id] += 1
+            self.kv_tokens += 1                  # decode growth holds KV too
             if r.generated >= r.max_new_tokens:
                 r.finish_time = end
                 finished.append(r)
@@ -191,6 +256,9 @@ class SimResult:
     cross_frac_final: float
     migrations: int
     per_engine_steps: List[int]
+    report_by_class: Dict[str, LatencyReport] = dataclasses.field(
+        default_factory=dict)
+    preemptions: int = 0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -256,4 +324,6 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
         report=summarize(finished, horizon),
         prefix_hits=hits, prefix_probed=probed,
         moe_mult_final=experts.moe_mult, cross_frac_final=experts.cross_frac,
-        migrations=experts.migrations, per_engine_steps=steps)
+        migrations=experts.migrations, per_engine_steps=steps,
+        report_by_class=summarize_by_class(finished, horizon),
+        preemptions=sum(e.preemptions for e in engines))

@@ -59,12 +59,18 @@ def _sample_output_lens(rng: np.random.Generator, n: int) -> np.ndarray:
 def burstgpt_trace(n: int = 1000, distribution: str = "random", rps: float = 1.4,
                    seed: int = 0, with_users: bool = False,
                    vocab_size: Optional[int] = None,
-                   burstiness: float = 2.5) -> List[Request]:
+                   burstiness: float = 2.5,
+                   interactive_frac: float = 0.0) -> List[Request]:
     """Arrivals at mean `rps` with BurstGPT-like burstiness (the dataset's
     namesake): a two-state MMPP alternating burst/calm phases whose
     inter-arrival CV ~= `burstiness` (CV=1 == Poisson; the paper's queueing
     effects, e.g. P99 TTFT ~ 35x the mean, require the bursty arrivals of the
-    real trace).  Prompt lengths follow `distribution` (Fig. 5)."""
+    real trace).  Prompt lengths follow `distribution` (Fig. 5).
+
+    `interactive_frac` > 0 tags that fraction of requests with
+    priority_class="interactive" (rest "batch") for mixed-tenant /
+    preemption experiments; the draw is independent of size and arrival so
+    both classes see the same length distribution."""
     rng = np.random.default_rng(seed)
     if burstiness <= 1.0:
         gaps = rng.exponential(1.0 / rps, n)
@@ -86,6 +92,10 @@ def burstgpt_trace(n: int = 1000, distribution: str = "random", rps: float = 1.4
     arrivals = np.cumsum(gaps)
     plens = _sample_prompt_lens(rng, n, distribution)
     olens = _sample_output_lens(rng, n)
+    # guard the draw so interactive_frac=0 leaves the seeded stream (and thus
+    # every pre-existing trace) bit-identical
+    interactive = (rng.random(n) < interactive_frac) if interactive_frac > 0 \
+        else np.zeros(n, bool)
     reqs = []
     for i in range(n):
         tokens = rng.integers(0, vocab_size, plens[i]) if vocab_size else None
@@ -93,5 +103,6 @@ def burstgpt_trace(n: int = 1000, distribution: str = "random", rps: float = 1.4
             req_id=i, prompt_len=int(plens[i]), max_new_tokens=int(olens[i]),
             arrival_time=float(arrivals[i]),
             user_id=f"user{rng.integers(0, max(n // 10, 1))}" if with_users else None,
-            prompt_tokens=tokens))
+            prompt_tokens=tokens,
+            priority_class="interactive" if interactive[i] else "batch"))
     return reqs

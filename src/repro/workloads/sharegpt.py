@@ -19,14 +19,23 @@ def sharegpt_trace(n_requests: int = 10_000, n_users: int = 500, rps: float = 4.
                    seed: int = 0, vocab_size: int = 50_000,
                    utterance_mean: int = 60, answer_mean: int = 120,
                    max_context: int = 3000,
-                   continue_p: float = 1.0) -> List[Request]:
+                   continue_p: float = 1.0,
+                   interactive_frac: float = 0.0) -> List[Request]:
     """continue_p < 1 makes a user's request start a FRESH conversation with
     probability (1 - continue_p) — real ShareGPT traffic is mostly new
     conversations (the paper measures only a 3.6-3.8% block hit rate), and
-    only session continuations can hit the prefix cache."""
+    only session continuations can hit the prefix cache.
+
+    `interactive_frac` > 0 marks that fraction of USERS as interactive-class
+    (chat sessions are per-user latency-sensitive, so the class sticks to the
+    whole conversation); everyone else is batch-class."""
     rng = np.random.default_rng(seed)
     transcripts = {u: list(rng.integers(0, vocab_size, rng.integers(10, 40)))
                    for u in range(n_users)}
+    # short-circuit keeps the seeded stream unchanged at interactive_frac=0
+    user_class = {u: "interactive" if interactive_frac > 0
+                  and rng.random() < interactive_frac else "batch"
+                  for u in range(n_users)}
     gaps = rng.exponential(1.0 / rps, n_requests)
     arrivals = np.cumsum(gaps)
     reqs: List[Request] = []
@@ -44,7 +53,8 @@ def sharegpt_trace(n_requests: int = 10_000, n_users: int = 500, rps: float = 4.
         reqs.append(Request(
             req_id=i, prompt_len=len(t), max_new_tokens=out_len,
             arrival_time=float(arrivals[i]), user_id=f"user{u}",
-            prompt_tokens=np.asarray(t, np.int64).copy()))
+            prompt_tokens=np.asarray(t, np.int64).copy(),
+            priority_class=user_class[u]))
         # the (simulated) answer extends the transcript for the next turn
         t.extend(rng.integers(0, vocab_size, out_len))
     return reqs

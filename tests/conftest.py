@@ -1,0 +1,12 @@
+"""Test bootstrap.
+
+`src/` is put on sys.path by pyproject's [tool.pytest.ini_options]
+pythonpath; here we only handle the optional `hypothesis` dependency: prefer
+the real package, fall back to the deterministic shim so the property tests
+still run in hermetic environments (see _hypothesis_fallback.py).
+"""
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from _hypothesis_fallback import install
+    install()
