@@ -8,7 +8,7 @@ from __future__ import annotations
 import argparse
 import copy
 
-from benchmarks.common import ResultCache, emit
+from benchmarks.common import emit
 from repro.configs import get_config
 from repro.sim.simulator import simulate
 from repro.workloads.sharegpt import sharegpt_trace

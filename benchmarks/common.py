@@ -5,7 +5,7 @@ import copy
 import json
 import time
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs import get_config
 from repro.sim.simulator import SimResult, simulate
@@ -35,15 +35,24 @@ def run_sim(variant: str, distribution: str, rps: float, seed: int,
                     n_engines=2, hw="a100", kv_pool_tokens=KV_POOL, seed=seed)
 
 
+# Bump whenever simulator semantics change: a stale on-disk cache would
+# otherwise silently report pre-change numbers.  2 = unified SchedulerCore
+# (first token at admission, decode starts next step).
+CACHE_SCHEMA = 2
+
+
 class ResultCache:
     """Sims are deterministic in (variant, dist, rps, seed, n); cache across
-    the per-figure benchmarks so run.py doesn't re-simulate."""
+    the per-figure benchmarks so run.py doesn't re-simulate.  The persisted
+    file records CACHE_SCHEMA and is discarded on mismatch."""
 
     def __init__(self, path: Path = ART / "sim_cache.json"):
         self.path = path
         self._mem: Dict[str, dict] = {}
         if path.exists():
-            self._mem = json.loads(path.read_text())
+            disk = json.loads(path.read_text())
+            if disk.get("_schema") == CACHE_SCHEMA:
+                self._mem = {k: v for k, v in disk.items() if k != "_schema"}
 
     def get(self, variant, dist, rps, seed, n=N_REQUESTS) -> dict:
         key = f"{variant}|{dist}|{rps}|{seed}|{n}|{MODEL}"
@@ -62,7 +71,8 @@ class ResultCache:
                 "cross_frac": res.cross_frac_final,
                 "wall_s": time.time() - t0,
             }
-            self.path.write_text(json.dumps(self._mem, indent=0))
+            self.path.write_text(json.dumps(
+                {"_schema": CACHE_SCHEMA, **self._mem}, indent=0))
         return self._mem[key]
 
 

@@ -19,9 +19,9 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.configs import ASSIGNED_ARCHS, depth_pair, dryrun_cells, get_config
+from repro.configs import ASSIGNED_ARCHS, depth_pair, get_config
 from repro.models.config import SHAPE_CELLS, cell_applicable
-from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops
+from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS
 
 ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
 

@@ -9,8 +9,14 @@ from repro.core.placement import (assignment_to_perm, comm_cut, eplb_placement,
                                   gimbal_placement, migration_cost, milp_exact,
                                   objective, perm_to_assignment, row_imbalance,
                                   static_placement)
-from repro.core.eplb import ExpertRebalancer, RebalanceEvent
-from repro.core.gimbal import VARIANTS, make_queue, make_rebalancer, make_router, variant_flags
+from repro.core.eplb import (ExpertRebalancer, NullExpertLevel, RebalanceEvent,
+                             SyntheticExpertLevel)
+from repro.core.gimbal import (VARIANTS, make_queue, make_rebalancer,
+                               make_router, make_sim_expert_level,
+                               variant_flags)
+from repro.core.prefix_cache import PrefixCache
+from repro.core.scheduler import (Backend, RunningSeq, SchedEvent,
+                                  SchedulerCore)
 
 __all__ = [
     "PRIORITY_CLASSES", "EngineMetrics", "GimbalConfig", "Request", "class_rank",
@@ -21,6 +27,10 @@ __all__ = [
     "assignment_to_perm", "comm_cut", "eplb_placement", "gimbal_placement",
     "migration_cost", "milp_exact", "objective", "perm_to_assignment",
     "row_imbalance", "static_placement",
-    "ExpertRebalancer", "RebalanceEvent",
-    "VARIANTS", "make_queue", "make_rebalancer", "make_router", "variant_flags",
+    "ExpertRebalancer", "NullExpertLevel", "RebalanceEvent",
+    "SyntheticExpertLevel",
+    "VARIANTS", "make_queue", "make_rebalancer", "make_router",
+    "make_sim_expert_level", "variant_flags",
+    "PrefixCache",
+    "Backend", "RunningSeq", "SchedEvent", "SchedulerCore",
 ]

@@ -1,20 +1,34 @@
-"""Expert Dynamic Replacement controller (paper Algorithm 3 driver loop).
+"""Expert Dynamic Replacement: the ONE Algorithm 3 driver for both modes.
 
-Owns the AffinityTracker, re-evaluates placement every tau engine steps, and
-physically relocates the stacked expert weights (models.moe.permute_expert_weights).
-The anchor device index is fixed at startup (paper: "manually specified before
-system startup"), so affinity-linked experts never migrate repeatedly.
+``ExpertRebalancer`` owns the AffinityTracker, re-evaluates placement every
+tau engine steps, and emits a ``RebalanceEvent`` per relocation.  The anchor
+device index is fixed at startup (paper: "manually specified before system
+startup"), so affinity-linked experts never migrate repeatedly.
+
+SchedulerCore (core/scheduler.py) drives it identically in serving and
+simulation: the core feeds per-step routing stats in via ``observe`` and
+calls ``tick`` once per engine iteration; when a new perm fires, the backend
+applies it (the JAX backend physically permutes the stacked expert weights;
+the cost-model backend has no weights to move).
+
+``SyntheticExpertLevel`` is the simulator's subclass: the same driver and
+event stream, but seeded with Fig.3/4-shaped synthetic statistics (no real
+routed traffic to observe) and additionally exposing the cost model's
+coupling factors (hotspot multiplier, cross-device dispatch fraction)
+recomputed from the current placement.  ``NullExpertLevel`` stands in for
+non-MoE architectures.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 
-from repro.core.affinity import AffinityTracker
-from repro.core.placement import (eplb_placement, gimbal_placement, migration_cost,
-                                  perm_to_assignment, static_placement)
+from repro.core.affinity import AffinityTracker, synthetic_stats
+from repro.core.placement import (comm_cut, eplb_placement, gimbal_placement,
+                                  migration_cost, perm_to_assignment,
+                                  static_placement)
 from repro.core.types import GimbalConfig
 from repro.models.config import ModelConfig
 from repro.models.moe import ExpertPlacement
@@ -96,6 +110,15 @@ class ExpertRebalancer:
         per_layer = 3 * c.d_model * c.moe_d_ff * np.dtype(c.dtype).itemsize
         return int(per_layer * n_moe)
 
+    # --- counters (identical in serving and simulation) -------------------------
+    @property
+    def migrations(self) -> int:
+        return len(self.events)
+
+    @property
+    def bytes_moved(self) -> int:
+        return sum(e.bytes_moved for e in self.events)
+
     # --- placement consumed by the model ---------------------------------------------
     def placement(self) -> ExpertPlacement:
         return ExpertPlacement.from_perm(self.perm)
@@ -104,3 +127,74 @@ class ExpertRebalancer:
         """(L, E) perm broadcast over layers — the paper's single global
         partition applied at every MoE layer."""
         return np.broadcast_to(self.perm, (n_scanned_layers, len(self.perm))).copy()
+
+
+class SyntheticExpertLevel(ExpertRebalancer):
+    """Expert level for the simulator: the same Algorithm 3 driver and
+    RebalanceEvent stream as serving, but seeded with synthetic Fig.3/4-shaped
+    (A, W) statistics — there is no real routed traffic to ``observe`` — and
+    exposing the cost model's engine-coupling factors:
+
+      * ``moe_mult``   — hotspot multiplier, hottest device load / mean
+                         (per layer, averaged);
+      * ``cross_frac`` — fraction of inter-layer expert traffic crossing a
+                         device boundary under the current placement.
+
+    Experts are EP-sharded across all engines' devices (§V-A.1), so ONE
+    instance is shared by every SimEngine core in a cluster."""
+
+    def __init__(self, model_cfg: ModelConfig, num_devices: int,
+                 policy: str = "gimbal", anchor: int = 0,
+                 cfg: Optional[GimbalConfig] = None, top_e: int = 16,
+                 seed: int = 0):
+        super().__init__(model_cfg, num_devices, policy=policy, anchor=anchor,
+                         cfg=cfg, top_e=top_e)
+        import jax
+        A, W, _ = synthetic_stats(
+            jax.random.key(seed), max(model_cfg.num_moe_layers(), 1),
+            model_cfg.num_experts, top_k=model_cfg.moe_top_k)
+        self.tracker.A[...] = A
+        self.tracker.W[...] = W
+        self._update_factors()
+
+    def tick(self) -> Optional[np.ndarray]:
+        new_perm = super().tick()
+        if new_perm is not None:
+            self._update_factors()
+        return new_perm
+
+    def _update_factors(self) -> None:
+        assign = perm_to_assignment(self.perm, self.g)
+        onehot = np.eye(self.g)[assign]
+        loads = self.tracker.A @ onehot               # (L, g)
+        self.moe_mult = float(np.mean(
+            loads.max(1) / np.maximum(loads.mean(1), 1e-9)))
+        total = self.tracker.W.sum()
+        self.cross_frac = float(comm_cut(self.tracker.W, assign)
+                                / max(total, 1e-9))
+
+
+class NullExpertLevel:
+    """Expert level for non-MoE architectures: no placement to manage, unit
+    coupling factors, empty event stream — so callers never branch on arch."""
+
+    moe_mult = 1.0
+    cross_frac = 0.0
+    perm = None
+
+    def __init__(self):
+        self.events: List[RebalanceEvent] = []
+
+    def observe(self, expert_ids) -> None:
+        pass
+
+    def tick(self) -> Optional[np.ndarray]:
+        return None
+
+    @property
+    def migrations(self) -> int:
+        return 0
+
+    @property
+    def bytes_moved(self) -> int:
+        return 0

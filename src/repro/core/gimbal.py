@@ -11,7 +11,8 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Sequence
 
-from repro.core.eplb import ExpertRebalancer
+from repro.core.eplb import (ExpertRebalancer, NullExpertLevel,
+                             SyntheticExpertLevel)
 from repro.core.router import GimbalRouter, RoundRobinRouter
 from repro.core.sjf import SJFQueue
 from repro.core.types import GimbalConfig
@@ -42,12 +43,28 @@ def make_queue(variant: str, cfg: Optional[GimbalConfig] = None) -> SJFQueue:
     return SJFQueue(cfg or GimbalConfig(), policy="sjf" if f["sjf"] else "fcfs")
 
 
+def _expert_policy(variant: str) -> str:
+    if variant == "eplb":                 # extra baseline: count-only EPLB
+        return "eplb"
+    return "gimbal" if variant_flags(variant)["edr"] else "static"
+
+
 def make_rebalancer(variant: str, model_cfg: ModelConfig, num_devices: int,
                     cfg: Optional[GimbalConfig] = None, anchor: int = 0
                     ) -> Optional[ExpertRebalancer]:
     if not model_cfg.is_moe:
         return None  # expert level inapplicable (see DESIGN.md §Arch-applicability)
-    f = variant_flags(variant)
-    policy = "gimbal" if f["edr"] else "static"
-    return ExpertRebalancer(model_cfg, num_devices, policy=policy, anchor=anchor,
-                            cfg=cfg or GimbalConfig())
+    return ExpertRebalancer(model_cfg, num_devices, policy=_expert_policy(variant),
+                            anchor=anchor, cfg=cfg or GimbalConfig())
+
+
+def make_sim_expert_level(variant: str, model_cfg: ModelConfig, num_devices: int,
+                          cfg: Optional[GimbalConfig] = None, anchor: int = 0,
+                          seed: int = 0):
+    """Simulator twin of make_rebalancer: same policy wiring, synthetic stats,
+    plus the cost model's (moe_mult, cross_frac) coupling factors."""
+    if not model_cfg.is_moe:
+        return NullExpertLevel()
+    return SyntheticExpertLevel(model_cfg, num_devices,
+                                policy=_expert_policy(variant), anchor=anchor,
+                                cfg=cfg or GimbalConfig(), seed=seed)

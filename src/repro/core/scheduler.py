@@ -1,0 +1,362 @@
+"""SchedulerCore: the backend-agnostic per-engine scheduling state machine.
+
+One implementation of the paper's request-level decisions — SJF/FCFS waiting
+queue with aging (Alg. 2), chunked-prefill admission budget, continuous-
+batching capacity, priority preemption with victim selection, KV + prefix-
+cache token accounting, per-step metrics — shared by the live JAX engine
+(serving/engine.py) and the discrete-event simulator (sim/simulator.py).
+
+Before this module existed the two paths hand-mirrored each other and drifted
+(PR 1 fixed SimEngine KV accounting the live engine never had wrong, and a
+chunked-prefill overrun the simulator never had).  Now an admission or
+preemption decision cannot differ between simulation and serving: both shells
+delegate every decision to SchedulerCore and only differ in their Backend —
+what a "prefill" or "decode" physically does and how long a step takes.
+
+The Backend protocol is intentionally small:
+
+  * capacity:     ``max_concurrency`` (decode slots / max running batch) and
+                  ``kv_capacity`` (KV pool size in tokens) gate admission;
+  * execution:    ``start`` / ``decode`` / ``release`` perform (or skip) the
+                  actual compute and may emit per-step expert routing stats,
+                  which the core feeds to the expert level (core/eplb.py);
+  * time:         ``step_time`` maps one core iteration to a timestamp — the
+                  live engine is logically clocked by the caller, the
+                  simulator answers from the roofline cost model;
+  * accounting:   ``charge_prefix_hits`` controls whether prefix-cache hits
+                  reduce the prefill budget charge (the simulator models
+                  vLLM's block reuse; the live engine recomputes the full
+                  prefill and must not under-charge).
+
+Event stream: every admit / preempt / finish decision is appended to
+``SchedulerCore.events`` in decision order.  The differential parity test
+(tests/test_scheduler_parity.py) drives the same trace through both backends
+and asserts the streams are identical — the refactor's acceptance oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.preempt import (eligible_victims, reset_for_resume,
+                                select_victim)
+from repro.core.sjf import SJFQueue
+from repro.core.types import (PRIORITY_CLASSES, EngineMetrics, GimbalConfig,
+                              Request)
+from repro.core.prefix_cache import PrefixCache
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedEvent:
+    """One scheduling decision, in decision order.  ``step`` is the engine-
+    local iteration index; timestamps are deliberately excluded so the live
+    engine and the simulator emit byte-identical streams."""
+    kind: str          # "admit" | "preempt" | "finish"
+    step: int
+    req_id: int
+
+
+@dataclasses.dataclass
+class RunningSeq:
+    """A request holding a decode seat.  ``handle`` is backend-opaque (KV slot
+    index for the JAX backend, None for the cost-model backend)."""
+    r: Request
+    handle: object
+    admit_time: float
+
+
+class Backend(Protocol):
+    """What SchedulerCore needs from an execution substrate."""
+
+    max_concurrency: int        # decode slots (JAX) / max running batch (sim)
+    kv_capacity: int            # KV pool size in tokens
+    max_ctx_tokens: Optional[int]   # per-request resident-KV cap (None = no cap)
+    charge_prefix_hits: bool    # prefix-cache hits reduce the budget charge
+
+    def start(self, r: Request, now: float) -> Tuple[object, Optional[np.ndarray]]:
+        """Begin serving ``r`` (prefill).  Returns (handle, routing stats)."""
+        ...
+
+    def decode(self, active: Sequence[Tuple[object, Request]], now: float
+               ) -> Tuple[Set[int], Optional[np.ndarray]]:
+        """One decode step for every (handle, request) pair.  Returns
+        (req_ids that hit EOS, routing stats)."""
+        ...
+
+    def release(self, handle: object, r: Request) -> None:
+        """Free the seat/KV held by ``handle`` (finish, preempt, drain)."""
+        ...
+
+    def apply_placement(self, perm: np.ndarray) -> None:
+        """The expert level re-solved placement: relocate expert state."""
+        ...
+
+    def step_time(self, now: float, prefill_tokens: int, decode_batch: int,
+                  avg_ctx: float, queue_len: int) -> float:
+        """Timestamp at which this iteration's tokens materialize."""
+        ...
+
+    def kv_usage(self, kv_tokens: int) -> float:
+        """Fraction of KV capacity in use, in [0, 1] (Alg. 1 signal)."""
+        ...
+
+
+_UNBLOCKED_RANK = len(PRIORITY_CLASSES) + 1
+
+
+class SchedulerCore:
+    """The full per-engine scheduling state machine (request + expert levels;
+    the engine level consumes the metrics this core emits)."""
+
+    def __init__(self, backend: Backend, queue: SJFQueue,
+                 gcfg: Optional[GimbalConfig] = None, *,
+                 prefill_budget: int = 512, engine_id: int = 0,
+                 expert_level=None, prefix_cache: Optional[PrefixCache] = None):
+        self.backend = backend
+        self.queue = queue
+        self.gcfg = gcfg or GimbalConfig()
+        self.prefill_budget = prefill_budget
+        self.engine_id = engine_id
+        self.expert = expert_level
+        self.prefix = prefix_cache if prefix_cache is not None else PrefixCache()
+        self.running: List[RunningSeq] = []
+        self.ctx_tokens: Dict[int, int] = {}   # req_id -> resident KV tokens
+        self.kv_tokens = 0                     # == sum(ctx_tokens.values())
+        self.steps = 0
+        self.preemptions = 0
+        self.healthy = True
+        self.events: List[SchedEvent] = []
+
+    # ------------------------------------------------------------------ intake
+    def submit(self, r: Request, now: float = 0.0) -> None:
+        if r.prompt_tokens is not None:
+            toks = list(np.asarray(r.prompt_tokens).reshape(-1))
+            hits = self.prefix.match(toks, now)
+            self.prefix.insert(toks, now)
+            r._cached = hits if self.backend.charge_prefix_hits else 0
+        self.queue.push(r)
+
+    # ------------------------------------------------------------------ metrics
+    def metrics(self, now: float) -> EngineMetrics:
+        """The single metrics path: Cluster/MetricsBus snapshots come from
+        core accounting in both serving and simulation."""
+        return EngineMetrics(
+            engine_id=self.engine_id,
+            kv_usage=self.backend.kv_usage(self.kv_tokens),
+            running_load=self.kv_tokens + self.queue.waiting_tokens,
+            num_running=len(self.running),
+            num_waiting=len(self.queue),
+            timestamp=now,
+            healthy=self.healthy,
+        )
+
+    @property
+    def idle(self) -> bool:
+        return not self.running and len(self.queue) == 0
+
+    def num_running(self) -> int:
+        return len(self.running)
+
+    def running_requests(self) -> List[Request]:
+        return [seq.r for seq in self.running]
+
+    # ------------------------------------------------------------------ admission
+    def _charge(self, r: Request) -> int:
+        """Prefill tokens this request charges against the chunked budget."""
+        return r.prompt_len - min(getattr(r, "_cached", 0), r.prompt_len)
+
+    def _kv_demand(self, r: Request) -> int:
+        """Resident KV tokens ``r`` will actually hold if admitted: the
+        backend may truncate prompts (JaxBackend clips to the slot length),
+        so the pool must not be charged for tokens that never materialize —
+        otherwise an over-long prompt the backend would happily serve
+        truncated is starved forever by the capacity gate."""
+        cap = self.backend.max_ctx_tokens
+        return r.prompt_len if cap is None else min(r.prompt_len, cap)
+
+    def _grow_ctx(self, req_id: int) -> None:
+        """One more resident token for ``req_id``, capped at the backend's
+        per-request limit (mirrors JaxBackend's slot_len clipping)."""
+        cap = self.backend.max_ctx_tokens
+        ctx = self.ctx_tokens[req_id]
+        new = ctx + 1 if cap is None else min(ctx + 1, cap)
+        self.ctx_tokens[req_id] = new
+        self.kv_tokens += new - ctx
+
+    def _blocked(self, r: Request, n_admitted: int) -> bool:
+        """Admission blocked for ``r`` under the batch/KV-capacity limits."""
+        return (len(self.running) + n_admitted >= self.backend.max_concurrency
+                or self.kv_tokens + self._kv_demand(r) > self.backend.kv_capacity)
+
+    def _eviction_unblocks(self, r: Request, n_admitted: int) -> bool:
+        """True iff evicting every preemptible victim would make ``r`` fit —
+        the feasibility gate before destroying any batch progress."""
+        evictable = [v for _, v in eligible_victims(
+            [(seq.handle, seq.r) for seq in self.running], r.rank, self.gcfg)]
+        kv_after = self.kv_tokens - sum(self.ctx_tokens[v.req_id]
+                                        for v in evictable)
+        run_after = len(self.running) - len(evictable) + n_admitted
+        return (run_after < self.backend.max_concurrency
+                and kv_after + self._kv_demand(r) <= self.backend.kv_capacity)
+
+    def _evict_for(self, rank: int) -> Optional[Request]:
+        """Evict one running request preemptible by class ``rank``: KV seat
+        released, generation state reset for recompute-on-resume (greedy
+        decode regenerates identical tokens), the conservative ``_cached = 0``
+        re-charges the full prefill.  The victim is RETURNED, not re-queued —
+        the caller re-queues after admission so a same-step victim (which
+        counts as aged in the reorder, and aging outranks class) can never
+        win a freed seat straight back from the request it was evicted for."""
+        pick = select_victim([(seq.handle, seq.r) for seq in self.running],
+                             rank, self.gcfg,
+                             admit_order=[seq.admit_time for seq in self.running])
+        if pick is None:
+            return None
+        _, victim = pick
+        seq = next(s for s in self.running if s.r is victim)
+        self.running.remove(seq)
+        self.kv_tokens -= self.ctx_tokens.pop(victim.req_id)
+        self.backend.release(seq.handle, victim)
+        reset_for_resume(victim)
+        victim._cached = 0
+        self.preemptions += 1
+        self.events.append(SchedEvent("preempt", self.steps, victim.req_id))
+        return victim
+
+    def schedule(self, now: float) -> Tuple[List[Request], List[Request]]:
+        """The unified admission + preemption scan (Alg. 2 order, chunked-
+        prefill budget, capacity gates, priority eviction).
+
+        Head-blocking per class: once a request of some rank is blocked (on
+        KV, batch size, OR budget), equal-or-less-urgent requests behind it
+        may not leapfrog it and steal what it is waiting for; with preemption
+        enabled, strictly-more-urgent requests behind a blocked head may
+        still be scanned so an interactive arrival behind an aged-batch head
+        reaches its victims.  An oversized head (charge > whole budget) is
+        admitted alone; an unseated head charges nothing — it cannot run
+        this step and must not shield urgent waiters behind it.
+
+        Returns (admitted, victims); victims must be re-queued by the caller
+        only after admission completes."""
+        order = self.queue.reorder(now)
+        budget = self.prefill_budget
+        admitted: List[Request] = []
+        victims: List[Request] = []
+        blocked_rank = _UNBLOCKED_RANK      # most-urgent rank blocked so far
+        for r in list(order):
+            if r.rank >= blocked_rank:
+                continue
+            need = self._charge(r)
+            if need > budget and admitted:
+                if self.gcfg.enable_preemption:
+                    # budget-blocked head: strictly-more-urgent requests
+                    # behind it may still be scanned (symmetric with the
+                    # capacity-blocked case below)
+                    blocked_rank = min(blocked_rank, r.rank)
+                    continue
+                break
+            # priority preemption: evict lower-class running work to make
+            # room, but only for requests admissible this iteration (budget-
+            # gated above) and only when eviction can actually unblock r
+            if (self.gcfg.enable_preemption
+                    and self._blocked(r, len(admitted))
+                    and self._eviction_unblocks(r, len(admitted))):
+                while self._blocked(r, len(admitted)):
+                    v = self._evict_for(r.rank)
+                    if v is None:
+                        break
+                    victims.append(v)
+            if self._blocked(r, len(admitted)):
+                if self.gcfg.enable_preemption:
+                    blocked_rank = min(blocked_rank, r.rank)
+                    continue
+                break
+            budget -= need
+            admitted.append(r)
+            self.kv_tokens += self._kv_demand(r)
+            self.queue.remove(r)
+            self.events.append(SchedEvent("admit", self.steps, r.req_id))
+        return admitted, victims
+
+    # ------------------------------------------------------------------ the loop
+    def step(self, now: float) -> Tuple[float, List[Request]]:
+        """One continuous-batching iteration starting at ``now``.
+
+        Order of play: (1) unified admission/preemption scan; (2) the backend
+        dates this iteration (prefill + decode batch shaped by pre-admission
+        state, like a fused chunked-prefill iteration); (3) admitted requests
+        prefill and emit their first token; (4) previously-running requests
+        decode one token; (5) the expert level ticks.  Returns
+        (end timestamp, requests finished this step)."""
+        if not self.healthy:
+            return now, []
+        admitted, victims = self.schedule(now)
+        # the decode batch: admitted in a PRIOR step and not evicted above
+        # (schedule() runs first, so victims never decode after losing KV)
+        decoding = list(self.running)
+        prefill_tokens = sum(self._charge(r) for r in admitted)
+        avg_ctx = (float(np.mean([self.ctx_tokens[seq.r.req_id]
+                                  for seq in decoding])) if decoding else 0.0)
+        end = self.backend.step_time(now, prefill_tokens, len(decoding),
+                                     avg_ctx, queue_len=len(self.queue))
+        # admitted requests prefill; first token materializes at `end`
+        for r in admitted:
+            handle, stats = self.backend.start(r, now)
+            if stats is not None and self.expert is not None:
+                self.expert.observe(stats)
+            self.running.append(RunningSeq(r, handle, admit_time=now))
+            r.engine_id = self.engine_id
+            r.first_token_time = end
+            r.generated = 1
+            self.ctx_tokens[r.req_id] = self._kv_demand(r)
+            self._grow_ctx(r.req_id)        # + the first generated token;
+            #                                 keep kv_tokens == sum(ctx)
+        # victims re-queue only AFTER admission (see _evict_for)
+        self.queue.extend(victims)
+        # one decode step over every previously-running request
+        finished: List[Request] = []
+        if decoding:
+            eos, stats = self.backend.decode(
+                [(seq.handle, seq.r) for seq in decoding], now)
+            if stats is not None and self.expert is not None:
+                self.expert.observe(stats)
+            for seq in decoding:
+                r = seq.r
+                r.generated += 1
+                self._grow_ctx(r.req_id)    # decode growth holds KV too
+                if r.generated >= r.max_new_tokens or r.req_id in eos:
+                    r.finish_time = end
+                    finished.append(r)
+                    self.running.remove(seq)
+                    self.kv_tokens -= self.ctx_tokens.pop(r.req_id)
+                    self.backend.release(seq.handle, r)
+                    self.events.append(SchedEvent("finish", self.steps, r.req_id))
+        # expert-level tick (Alg. 3 lines 6-9)
+        self.steps += 1
+        if self.expert is not None:
+            new_perm = self.expert.tick()
+            if new_perm is not None:
+                self.backend.apply_placement(new_perm)
+        return end, finished
+
+    # ------------------------------------------------------------------ fault tolerance
+    def drain(self) -> List[Request]:
+        """Pull every request (waiting + running) off this engine, resetting
+        running ones for re-execution elsewhere (KV is lost on failure)."""
+        out = self.queue.drain()
+        for seq in list(self.running):
+            r = seq.r
+            r.first_token_time = None
+            r.generated = 0
+            r.engine_id = None
+            self.kv_tokens -= self.ctx_tokens.pop(r.req_id, 0)
+            self.backend.release(seq.handle, r)
+            out.append(r)
+        self.running.clear()
+        return out
+
+    def event_log(self) -> List[Tuple[str, int, int]]:
+        """The (kind, step, req_id) decision stream — the parity oracle."""
+        return [(e.kind, e.step, e.req_id) for e in self.events]

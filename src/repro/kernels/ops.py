@@ -7,7 +7,6 @@ grouped GEMMs) used when the engine is configured with use_pallas=True.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -158,7 +158,7 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: Path,
                           donate_argnums=(0, 1))
             lowered = jfn.lower(aparams, aopt, batch)
         elif cell.kind == "prefill":
-            from repro.distributed.sharding import input_shardings, param_specs
+            from repro.distributed.sharding import param_specs
             fn, cspecs, out_spec = S.make_prefill_step(cfg, ctx, cell)
             pspec = param_specs(cfg, ctx)
             batch, bshard = S.train_inputs(cfg, ctx, cell, ispecs)

@@ -6,15 +6,14 @@ can ``jax.jit(fn, in_shardings=..., out_shardings=..., ...).lower(**specs)``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.context import ShardCtx, divides, shard_ctx
-from repro.distributed.sharding import (cache_specs, input_shardings, named,
+from repro.distributed.sharding import (cache_specs, input_shardings,
                                         param_specs)
 from repro.models import model as M
 from repro.models.config import ModelConfig, ShapeCell

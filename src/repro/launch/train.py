@@ -12,12 +12,10 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
-import numpy as np
 
-from repro.configs import get_cell, get_config, get_smoke_config
+from repro.configs import get_config, get_smoke_config
 from repro.distributed.sharding import named
 from repro.launch import steps as S
 from repro.launch.mesh import make_mesh

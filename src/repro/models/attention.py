@@ -199,13 +199,10 @@ def gqa_full(params: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     window = cfg.sliding_window if local else 0
     new_cache = None
     if cache is not None:
-        s_max = cache["k"].shape[1]
-        s = x.shape[1]
         new_cache = {
             "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
             "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
         }
-        del s_max, s
     out = _sdpa_auto(cfg, q, k, v, window, causal=True)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return out, new_cache
@@ -459,7 +456,6 @@ def _mla_decode_seqsharded(cfg: ModelConfig, params, q_nope, q_rope, ckv_new,
     the paper-faithful decompress-then-attend baseline, decompressing only the
     local chunk per rank."""
     dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
-    h = cfg.num_heads
     b = q_nope.shape[0]
     bdim = 1
     for a in ctx.batch_axes:

@@ -7,8 +7,6 @@ L) consumed by jax.lax.scan in model.py.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -8,7 +8,7 @@ Single B/C group (G=1), as in the 370m reference config.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

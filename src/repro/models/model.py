@@ -7,8 +7,7 @@ stays one-layer-sized regardless of depth (MaxText-style), which keeps the
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -314,7 +313,6 @@ def _scan_interleaved(params, cfg: ModelConfig, x, positions, cache, cache_pos,
 
 
 def _remat_policy(cfg: ModelConfig):
-    import jax.ad_checkpoint as adc
     if cfg.remat_policy == "dots":
         return jax.checkpoint_policies.checkpoint_dots
     if cfg.remat_policy == "none":

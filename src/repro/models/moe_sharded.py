@@ -22,8 +22,7 @@ perm + permutes the stacked weights; numerics are invariant.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

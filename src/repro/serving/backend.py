@@ -1,0 +1,188 @@
+"""JaxBackend: the real-compute execution substrate behind SchedulerCore.
+
+Owns everything physical about serving — the jitted prefill/decode functions,
+the fixed-slot device KV cache (JetStream-style static shapes for XLA), the
+per-slot last-token state, and expert-weight relocation when the expert level
+fires.  Every scheduling *decision* (admission, preemption, completion) is
+made by core/scheduler.py; this module only executes them.
+
+Timing is logical: ``step_time`` returns the caller-supplied ``now`` (the
+cluster/simulator owns the clock), so behaviour tests are deterministic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.eplb import ExpertRebalancer
+from repro.core.types import Request
+from repro.models import config as mcfg
+from repro.models import model as M
+from repro.serving.kvcache import SlotKVCache, write_slot
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class JaxBackend:
+    """Backend protocol implementation over the real JAX model (runs the
+    actual compute; used with reduced configs on CPU, the same code path a
+    TPU deployment would jit).
+
+    ``charge_prefix_hits`` is False: the live engine recomputes the full
+    prefill (its prefix cache is a routing/affinity signal, not block reuse),
+    so admission must charge the full prompt length against the budget.
+    """
+
+    charge_prefix_hits = False
+
+    def __init__(self, model_cfg: mcfg.ModelConfig, params: Any, *,
+                 max_slots: int = 4, max_seq: int = 256,
+                 eos_id: Optional[int] = None, dispatch_mode: str = "dense",
+                 rebalancer: Optional[ExpertRebalancer] = None):
+        self.cfg = model_cfg
+        self.params = params
+        self.rebalancer = rebalancer
+        self.kv = SlotKVCache(model_cfg, max_slots, max_seq)
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.dispatch_mode = dispatch_mode
+        self.max_concurrency = max_slots
+        self.kv_capacity = max_slots * max_seq
+        # prompts are physically truncated to the slot length (see start()),
+        # so a request can never hold more than one slot's worth of KV — the
+        # core's pool accounting must match or over-long prompts starve
+        self.max_ctx_tokens: Optional[int] = max_seq
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.slot_last_token = np.zeros(max_slots, np.int32)
+        self.relocations = 0
+        self._n_scan = model_cfg.num_moe_layers()
+        self._applied_perm: Optional[np.ndarray] = None
+        self._jit_decode = jax.jit(self._decode_fn)
+        # One compiled prefill per BUCKETED length: prompts are padded to the
+        # next power-of-two bucket and the jit cache is keyed on that bucket,
+        # so repeated prefills of previously-unseen lengths inside a bucket
+        # reuse the compiled fn instead of re-tracing.
+        self._prefill_for_bucket = functools.lru_cache(maxsize=None)(
+            self._make_prefill)
+
+    # ------------------------------------------------------------------ jit fns
+    def _placements(self):
+        if self.rebalancer is None:
+            return None
+        return jnp.asarray(self.rebalancer.placement_stack(self._n_scan))
+
+    def _decode_fn(self, params, tokens, cache, cache_pos, placements):
+        stats = self.cfg.is_moe and self.rebalancer is not None
+        return M.decode_step(params, self.cfg, tokens, cache, cache_pos,
+                             placements=placements, stats=stats,
+                             dispatch_mode=self.dispatch_mode)
+
+    def _make_prefill(self, plen: int):
+        @jax.jit
+        def fn(params, tokens, slot_cache, placements):
+            return M.prefill(params, self.cfg, tokens, slot_cache,
+                             placements=placements,
+                             dispatch_mode=self.dispatch_mode)
+        return fn
+
+    def prefill_cache_info(self):
+        """(hits, misses, ...) of the bucketed prefill jit cache."""
+        return self._prefill_for_bucket.cache_info()
+
+    # ------------------------------------------------------------------ Backend protocol
+    def start(self, r: Request, now: float
+              ) -> Tuple[int, Optional[np.ndarray]]:
+        slot = self.kv.alloc()
+        assert slot is not None, "SchedulerCore admitted past slot capacity"
+        plen = min(r.prompt_len, self.max_seq - 1)
+        if r.prompt_tokens is not None:
+            toks = np.asarray(r.prompt_tokens, np.int32).reshape(-1)[:plen]
+        else:
+            rng = np.random.default_rng(r.req_id)
+            toks = rng.integers(0, self.cfg.vocab_size, plen).astype(np.int32)
+        bl = _bucket(plen)
+        padded = np.zeros(bl, np.int32)
+        padded[:plen] = toks
+        slot_cache = M.init_cache(self.cfg, 1, self.max_seq)
+        fn = self._prefill_for_bucket(bl)
+        logits, slot_cache, aux = fn(self.params, jnp.asarray(padded)[None],
+                                     slot_cache, self._placements())
+        self.kv.cache = write_slot(self.kv.cache, slot_cache, slot)
+        self.slot_req[slot] = r
+        self.kv.slot_len[slot] = plen
+        self.slot_last_token[slot] = int(jnp.argmax(logits[0, plen - 1]))
+        stats = None
+        if "expert_ids" in aux:
+            stats = np.asarray(aux["expert_ids"])[:, :, :plen]
+        return slot, stats
+
+    def decode(self, active: Sequence[Tuple[int, Request]], now: float
+               ) -> Tuple[Set[int], Optional[np.ndarray]]:
+        tokens = jnp.asarray(self.slot_last_token)[:, None]
+        pos = self.kv.positions()
+        logits, new_cache, aux = self._jit_decode(
+            self.params, tokens, self.kv.cache, pos, self._placements())
+        self.kv.cache = new_cache
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        eos: Set[int] = set()
+        rows = []
+        for slot, r in active:
+            rows.append(slot)
+            self.slot_last_token[slot] = nxt[slot]
+            self.kv.slot_len[slot] = min(self.kv.slot_len[slot] + 1,
+                                         self.max_seq - 1)
+            if self.eos_id is not None and nxt[slot] == self.eos_id:
+                eos.add(r.req_id)
+        stats = None
+        if "expert_ids" in aux and rows:
+            stats = np.asarray(aux["expert_ids"])[:, rows]   # (L, B, 1, K)
+        return eos, stats
+
+    def release(self, handle: int, r: Request) -> None:
+        self.slot_req[handle] = None
+        self.kv.free(handle)
+
+    def step_time(self, now: float, prefill_tokens: int, decode_batch: int,
+                  avg_ctx: float, queue_len: int) -> float:
+        return now      # logical clock: the caller owns time
+
+    def kv_usage(self, kv_tokens: int) -> float:
+        return self.kv.usage()
+
+    def apply_placement(self, new_perm: np.ndarray) -> None:
+        """EDR fired: physically permute the stacked expert weights to match
+        the new placement.  Numerics are invariant (tests/test_placement.py)."""
+        from repro.core.placement import static_placement
+        from repro.models.moe import ExpertPlacement
+        self.relocations += 1
+        blocks = self.params["blocks"]
+        if "moe" not in blocks:
+            return
+        # weights are currently laid out for the PREVIOUS perm; we need
+        # old perm -> new perm
+        old_perm = self._applied_perm
+        if old_perm is None:
+            # initial layout is the static placement (== identity slot order)
+            old_perm = np.asarray(static_placement(self.cfg.num_experts,
+                                                   self.rebalancer.g))
+        old = ExpertPlacement.from_perm(old_perm)
+        new = ExpertPlacement.from_perm(new_perm)
+        gather_idx = old.perm[new.inv]
+        moe = dict(blocks["moe"])
+        for name in ("w_gate", "w_up", "w_down"):
+            moe[name] = blocks["moe"][name][:, gather_idx]
+        blocks = dict(blocks)
+        blocks["moe"] = moe
+        self.params = dict(self.params)
+        self.params["blocks"] = blocks
+        self._applied_perm = np.asarray(new_perm).copy()

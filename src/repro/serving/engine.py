@@ -1,35 +1,27 @@
-"""A single DP inference engine: continuous batching over fixed decode slots,
-chunked-prefill admission, SJF/FCFS waiting queue, optional Expert Dynamic
-Replacement — real JAX compute (runs the actual model; used with reduced
-configs on CPU, the same code path a TPU deployment would jit).
+"""A single DP inference engine: a thin shell over the unified SchedulerCore
+(core/scheduler.py) with the real-compute JaxBackend (serving/backend.py).
 
-Timing is *logical*: callers pass `now` (the cluster/simulator owns the clock),
-so behaviour tests are deterministic.
+Every scheduling decision — SJF/FCFS waiting queue with aging, chunked-prefill
+admission budget, continuous-batching slot allocation, priority preemption and
+victim selection, KV accounting, per-step metrics — lives in SchedulerCore and
+is byte-identical to the discrete-event simulator's (sim/simulator.py); see
+tests/test_scheduler_parity.py.  This class only wires the backend, the
+variant-selected queue, and the expert level together and preserves the
+historical public surface (slots, KV cache, counters) for callers and tests.
+
+Timing is *logical*: callers pass ``now`` (the cluster/simulator owns the
+clock), so behaviour tests are deterministic.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Any, List, Optional
 
 from repro.core.eplb import ExpertRebalancer
 from repro.core.gimbal import make_queue, make_rebalancer
-from repro.core.preempt import reset_for_resume, select_victim
+from repro.core.scheduler import SchedulerCore
 from repro.core.types import EngineMetrics, GimbalConfig, Request
 from repro.models import config as mcfg
-from repro.models import model as M
-from repro.serving.kvcache import SlotKVCache, write_slot
-from repro.serving.prefix_cache import PrefixCache
-
-
-def _bucket(n: int, lo: int = 16) -> int:
-    b = lo
-    while b < n:
-        b *= 2
-    return b
+from repro.serving.backend import JaxBackend
 
 
 class Engine:
@@ -40,271 +32,101 @@ class Engine:
                  dispatch_mode: str = "dense"):
         self.engine_id = engine_id
         self.cfg = model_cfg
-        self.params = params
         self.gcfg = gimbal_cfg or GimbalConfig()
-        self.queue = make_queue(variant, self.gcfg)
-        self.rebalancer: Optional[ExpertRebalancer] = make_rebalancer(
-            variant, model_cfg, num_expert_devices, self.gcfg)
-        self.kv = SlotKVCache(model_cfg, max_slots, max_seq)
-        self.prefix = PrefixCache()
-        self.prefill_budget = prefill_budget
-        self.eos_id = eos_id
-        self.dispatch_mode = dispatch_mode
-        self.healthy = True
-
-        self.max_slots = max_slots
-        self.max_seq = max_seq
-        self.slot_req: List[Optional[Request]] = [None] * max_slots
-        self.slot_last_token = np.zeros(max_slots, np.int32)
-        self.slot_admit_time = np.zeros(max_slots, np.float64)
-        self.steps = 0
-        self.relocations = 0
-        self.preemptions = 0
-
-        self._n_scan = model_cfg.num_moe_layers()
-        self._jit_decode = jax.jit(self._decode_fn)
-        self._jit_prefill = functools.lru_cache(maxsize=None)(self._make_prefill)
-
-    # ------------------------------------------------------------------ jit fns
-    def _placements(self):
-        if self.rebalancer is None:
-            return None
-        return jnp.asarray(self.rebalancer.placement_stack(self._n_scan))
-
-    def _decode_fn(self, params, tokens, cache, cache_pos, placements):
-        stats = self.cfg.is_moe and self.rebalancer is not None
-        return M.decode_step(params, self.cfg, tokens, cache, cache_pos,
-                             placements=placements, stats=stats,
-                             dispatch_mode=self.dispatch_mode)
-
-    def _make_prefill(self, plen: int):
-        @jax.jit
-        def fn(params, tokens, slot_cache, placements):
-            return M.prefill(params, self.cfg, tokens, slot_cache,
-                             placements=placements, dispatch_mode=self.dispatch_mode)
-        return fn
+        rebalancer = make_rebalancer(variant, model_cfg, num_expert_devices,
+                                     self.gcfg)
+        self.backend = JaxBackend(model_cfg, params, max_slots=max_slots,
+                                  max_seq=max_seq, eos_id=eos_id,
+                                  dispatch_mode=dispatch_mode,
+                                  rebalancer=rebalancer)
+        self.core = SchedulerCore(self.backend, make_queue(variant, self.gcfg),
+                                  self.gcfg, prefill_budget=prefill_budget,
+                                  engine_id=engine_id, expert_level=rebalancer)
 
     # ------------------------------------------------------------------ public API
     def submit(self, r: Request, now: float = 0.0) -> None:
-        if r.prompt_tokens is not None:
-            toks = list(np.asarray(r.prompt_tokens).reshape(-1))
-            self.prefix.match(toks, now)
-            self.prefix.insert(toks, now)
-        self.queue.push(r)
+        self.core.submit(r, now)
 
     def metrics(self, now: float) -> EngineMetrics:
-        running_tokens = int(self.kv.slot_len[[i for i, r in enumerate(self.slot_req)
-                                               if r is not None]].sum()) \
-            if any(r is not None for r in self.slot_req) else 0
-        return EngineMetrics(
-            engine_id=self.engine_id,
-            kv_usage=self.kv.usage(),
-            running_load=running_tokens + self.queue.waiting_tokens,
-            num_running=sum(r is not None for r in self.slot_req),
-            num_waiting=len(self.queue),
-            timestamp=now,
-            healthy=self.healthy,
-        )
+        return self.core.metrics(now)
 
     def num_active(self) -> int:
-        return sum(r is not None for r in self.slot_req)
+        return self.core.num_running()
 
-    # ------------------------------------------------------------------ the engine loop
     def step(self, now: float) -> List[Request]:
-        """One continuous-batching iteration.  Returns requests finished this step."""
-        if not self.healthy:
-            return []
-        finished: List[Request] = []
-        # 0) priority preemption: evict lower-class running work for urgent
-        # waiting requests, prefilling each beneficiary straight into the
-        # freed slot.  Victims are re-queued only AFTER admission: an evicted
-        # long-runner counts as aged in the reorder (aging outranks class)
-        # and would otherwise win a freed slot right back, starving the
-        # request the eviction was for.
-        victims, budget = self.preempt(now)
-        # 1) admission under the remaining chunked-prefill token budget.  A
-        # single pop_next call admits every head that fits cumulatively;
-        # re-popping with the shrunk budget would re-trigger the admit-alone
-        # rule each time and overrun the budget by one oversized head per call.
-        if self.kv.num_free > 0 and len(self.queue) > 0 and budget > 0:
-            admitted = self.queue.pop_next(now, budget)
-            for j, r in enumerate(admitted):
-                slot = self.kv.alloc()
-                if slot is None:
-                    # out of slots: re-queue this and every remaining popped request
-                    self.queue.extend(admitted[j:])
-                    break
-                self._prefill_into(r, slot, now)
-        self.queue.extend(victims)
-        # 2) one decode step over all slots
-        if self.num_active() > 0:
-            finished.extend(self._decode_all(now))
-        # 3) expert-level tick (Alg. 3 lines 6-9)
-        self.steps += 1
-        if self.rebalancer is not None:
-            new_perm = self.rebalancer.tick()
-            if new_perm is not None:
-                self._apply_placement()
+        """One continuous-batching iteration.  Returns requests finished this
+        step (all decisions in SchedulerCore.step)."""
+        _, finished = self.core.step(now)
         return finished
 
-    # ------------------------------------------------------------------ preemption
-    def preempt(self, now: float) -> "tuple[List[Request], int]":
-        """Evict lower-class running requests so more urgent waiting requests
-        get decode slots (GimbalConfig.enable_preemption).  Victims lose their
-        KV slot, get their generation state reset for recompute-on-resume
-        (same reset as drain_all; greedy decode regenerates identical tokens),
-        and are RETURNED rather than re-queued — the caller re-queues them
-        after admission, so a same-step victim can never win a slot back.
-
-        The scan mirrors pop_next's cumulative budget (including the
-        oversized-head-alone rule), so it never evicts for a request
-        admission couldn't take this step, and each beneficiary is prefilled
-        straight into the slot its victim freed — admission order would
-        otherwise hand that slot to an earlier (e.g. aged batch) waiter,
-        turning the eviction into equal-class preemption through the side
-        door.  Returns (victims, prefill budget remaining for admission)."""
-        budget = self.prefill_budget
-        victims: List[Request] = []
-        if not self.gcfg.enable_preemption:
-            return victims, budget
-        waiting = self.queue.reorder(now)
-        free = self.kv.num_free
-        used = 0     # cumulative prefill tokens of waiters SEATED this step:
-        #              free-slot takers and evict-beneficiaries.  A waiter that
-        #              gets neither seat nor victim charges nothing — it can't
-        #              run this step and must not shield urgent waiters behind
-        #              it (budget-wise or slot-wise).
-        for w in waiting:
-            oversized = used == 0 and w.prompt_len > self.prefill_budget
-            if used + w.prompt_len > self.prefill_budget and not oversized:
-                break              # cumulative budget exhausted for this step
-            seated = False
-            if free > 0:
-                free -= 1          # w can take an already-free slot
-                used += w.prompt_len
-                seated = True
-            else:
-                running = [(i, r) for i, r in enumerate(self.slot_req)
-                           if r is not None]
-                pick = select_victim(running, w.rank, self.gcfg,
-                                     admit_order=[self.slot_admit_time[i]
-                                                  for i, _ in running])
-                # no victim for THIS class: keep scanning — an aged batch
-                # head must not shield running work from an urgent waiter
-                if pick is not None:
-                    slot, victim = pick
-                    self._release_slot(slot)
-                    reset_for_resume(victim)
-                    victims.append(victim)
-                    self.preemptions += 1
-                    self.queue.remove(w)
-                    self._prefill_into(w, self.kv.alloc(), now)
-                    budget -= w.prompt_len
-                    used += w.prompt_len
-                    seated = True
-            if oversized and seated:
-                break              # admit-alone: nothing else fits this step
-            # an unseated oversized head charges nothing and must not shield
-            # urgent waiters behind it — keep scanning
-        return victims, budget
-
-    # ------------------------------------------------------------------ internals
-    def _release_slot(self, slot: int) -> None:
-        self.slot_req[slot] = None
-        self.kv.free(slot)
-
-    def _prefill_into(self, r: Request, slot: int, now: float) -> None:
-        plen = min(r.prompt_len, self.max_seq - 1)
-        if r.prompt_tokens is not None:
-            toks = np.asarray(r.prompt_tokens, np.int32).reshape(-1)[:plen]
-        else:
-            rng = np.random.default_rng(r.req_id)
-            toks = rng.integers(0, self.cfg.vocab_size, plen).astype(np.int32)
-        bl = _bucket(plen)
-        padded = np.zeros(bl, np.int32)
-        padded[:plen] = toks
-        slot_cache = M.init_cache(self.cfg, 1, self.max_seq)
-        fn = self._jit_prefill(bl)
-        logits, slot_cache, aux = fn(self.params, jnp.asarray(padded)[None],
-                                     slot_cache, self._placements())
-        self.kv.cache = write_slot(self.kv.cache, slot_cache, slot)
-        first = int(jnp.argmax(logits[0, plen - 1]))
-        self.slot_req[slot] = r
-        self.kv.slot_len[slot] = plen
-        self.slot_last_token[slot] = first
-        self.slot_admit_time[slot] = now
-        r.engine_id = self.engine_id
-        r.first_token_time = now
-        r.generated = 1
-        if self.rebalancer is not None and "expert_ids" in aux:
-            self.rebalancer.observe(np.asarray(aux["expert_ids"])[:, :, :plen])
-
-    def _decode_all(self, now: float) -> List[Request]:
-        tokens = jnp.asarray(self.slot_last_token)[:, None]
-        pos = self.kv.positions()
-        logits, new_cache, aux = self._jit_decode(self.params, tokens, self.kv.cache,
-                                                  pos, self._placements())
-        self.kv.cache = new_cache
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        finished: List[Request] = []
-        active_rows = []
-        for i, r in enumerate(self.slot_req):
-            if r is None:
-                continue
-            active_rows.append(i)
-            self.slot_last_token[i] = nxt[i]
-            self.kv.slot_len[i] = min(self.kv.slot_len[i] + 1, self.max_seq - 1)
-            r.generated += 1
-            done = r.generated >= r.max_new_tokens
-            if self.eos_id is not None and nxt[i] == self.eos_id:
-                done = True
-            if done:
-                r.finish_time = now
-                finished.append(r)
-                self._release_slot(i)
-        if (self.rebalancer is not None and "expert_ids" in aux and active_rows):
-            ids = np.asarray(aux["expert_ids"])          # (L, B, 1, K)
-            self.rebalancer.observe(ids[:, active_rows])
-        return finished
-
-    def _apply_placement(self) -> None:
-        """EDR fired: physically permute the stacked expert weights to match the
-        new placement.  Numerics are invariant (tests/test_placement.py)."""
-        from repro.core.placement import static_placement
-        from repro.models.moe import ExpertPlacement
-        # weights are currently laid out for the PREVIOUS perm; rebalancer.perm
-        # is the new one.  We need old perm -> new perm.
-        self.relocations += 1
-        blocks = self.params["blocks"]
-        if "moe" not in blocks:
-            return
-        old_perm = getattr(self, "_applied_perm", None)
-        if old_perm is None:
-            # initial layout is the static placement (== identity slot order)
-            old_perm = np.asarray(static_placement(self.cfg.num_experts, self.rebalancer.g))
-        new_perm = self.rebalancer.perm
-        old = ExpertPlacement.from_perm(old_perm)
-        new = ExpertPlacement.from_perm(new_perm)
-        gather_idx = old.perm[new.inv]
-        moe = dict(blocks["moe"])
-        for name in ("w_gate", "w_up", "w_down"):
-            moe[name] = blocks["moe"][name][:, gather_idx]
-        blocks = dict(blocks)
-        blocks["moe"] = moe
-        self.params = dict(self.params)
-        self.params["blocks"] = blocks
-        self._applied_perm = np.asarray(new_perm).copy()
-
-    # ------------------------------------------------------------------ fault tolerance
     def drain_all(self) -> List[Request]:
         """Pull every request (waiting + running) off this engine, resetting
         running ones for re-execution elsewhere (KV is lost on failure)."""
-        out = self.queue.drain()
-        for i, r in enumerate(self.slot_req):
-            if r is not None:
-                r.first_token_time = None
-                r.generated = 0
-                r.engine_id = None
-                out.append(r)
-                self._release_slot(i)
-        return out
+        return self.core.drain()
+
+    # ------------------------------------------------------------------ delegation
+    # Historical surface: scheduling state lives in the core, physical state
+    # in the backend; these views keep callers/tests/benchmarks working.
+    @property
+    def queue(self):
+        return self.core.queue
+
+    @property
+    def prefix(self):
+        return self.core.prefix
+
+    @property
+    def rebalancer(self) -> Optional[ExpertRebalancer]:
+        return self.core.expert
+
+    @property
+    def kv(self):
+        return self.backend.kv
+
+    @property
+    def params(self):
+        return self.backend.params
+
+    @property
+    def slot_req(self):
+        return self.backend.slot_req
+
+    @property
+    def slot_last_token(self):
+        return self.backend.slot_last_token
+
+    @property
+    def max_slots(self) -> int:
+        return self.backend.max_slots
+
+    @property
+    def max_seq(self) -> int:
+        return self.backend.max_seq
+
+    @property
+    def steps(self) -> int:
+        return self.core.steps
+
+    @property
+    def preemptions(self) -> int:
+        return self.core.preemptions
+
+    @property
+    def relocations(self) -> int:
+        return self.backend.relocations
+
+    @property
+    def prefill_budget(self) -> int:
+        return self.core.prefill_budget
+
+    @prefill_budget.setter
+    def prefill_budget(self, v: int) -> None:
+        self.core.prefill_budget = v
+
+    @property
+    def healthy(self) -> bool:
+        return self.core.healthy
+
+    @healthy.setter
+    def healthy(self, v: bool) -> None:
+        self.core.healthy = v

@@ -10,7 +10,7 @@ Two layers:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

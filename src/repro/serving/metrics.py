@@ -3,7 +3,6 @@ the request-level latency recorder (TTFT / TPOT / throughput, §V-A.5)."""
 from __future__ import annotations
 
 import dataclasses
-import statistics
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np

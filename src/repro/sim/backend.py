@@ -1,0 +1,59 @@
+"""CostModelBackend: the analytic execution substrate behind SchedulerCore.
+
+The performance-plane twin of serving/backend.py::JaxBackend: no compute
+happens — ``start``/``decode``/``release`` only exist so the core can drive
+the same state machine — and time comes from the roofline cost model
+(sim/costmodel.py) instead of a caller-owned logical clock.  Expert-level
+coupling enters through the shared SyntheticExpertLevel's (moe_mult,
+cross_frac) factors, the same numbers core/placement.py optimizes.
+
+``charge_prefix_hits`` is True: vLLM's prefix cache IS the KV block pool, so
+cached leading blocks reduce the chunked-prefill budget charge (the live JAX
+engine recomputes full prefills and charges full length — the one deliberate
+backend asymmetry)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.types import Request
+from repro.sim.costmodel import CostModel
+
+
+class CostModelBackend:
+    charge_prefix_hits = True
+
+    def __init__(self, cost: CostModel, expert_level, *,
+                 max_running: int = 256, kv_pool_tokens: int = 0):
+        self.cost = cost
+        self.expert = expert_level          # shared across engines (EP-sharded)
+        self.max_concurrency = max_running
+        # 0 -> cost-model capacity estimate
+        self.kv_capacity = kv_pool_tokens or cost.kv_capacity_tokens()
+        # no per-request cap: the pool itself is the only KV constraint
+        self.max_ctx_tokens: Optional[int] = None
+
+    # ------------------------------------------------------------------ Backend protocol
+    def start(self, r: Request, now: float
+              ) -> Tuple[None, Optional[np.ndarray]]:
+        return None, None                   # nothing physical to prefill
+
+    def decode(self, active: Sequence[Tuple[None, Request]], now: float
+               ) -> Tuple[Set[int], Optional[np.ndarray]]:
+        return set(), None                  # no real logits -> no EOS signal
+
+    def release(self, handle: None, r: Request) -> None:
+        pass
+
+    def apply_placement(self, new_perm: np.ndarray) -> None:
+        pass    # no weights to move; SyntheticExpertLevel re-derives factors
+
+    def step_time(self, now: float, prefill_tokens: int, decode_batch: int,
+                  avg_ctx: float, queue_len: int) -> float:
+        return now + self.cost.iteration_time(
+            prefill_tokens, decode_batch, avg_ctx,
+            self.expert.moe_mult, self.expert.cross_frac, queue_len=queue_len)
+
+    def kv_usage(self, kv_tokens: int) -> float:
+        return min(kv_tokens / self.kv_capacity, 1.0)

@@ -3,248 +3,85 @@
 Replays BurstGPT/ShareGPT traces against {vllm, dplb, sjfs, edr, gimbal}
 variants at production scale using the roofline cost model for per-iteration
 latency (sim/costmodel.py).  This is how the paper's §V tables (Figs. 6-12)
-are reproduced quantitatively on CPU-only hardware — the REAL scheduler code
-(core/router.py, core/sjf.py, core/placement.py) makes every decision; only
-model execution time is analytic.
+are reproduced quantitatively on CPU-only hardware.
 
-Engine model (vLLM-style continuous batching, per §V-A.1):
+Every scheduling decision is made by the SAME SchedulerCore the live JAX
+engine runs (core/scheduler.py) — SimEngine is a thin shell pairing that core
+with the analytic CostModelBackend (sim/backend.py), so an admission or
+preemption decision can never differ between simulation and serving
+(tests/test_scheduler_parity.py is the oracle).  Only model execution time is
+analytic:
+
   * each engine owns one device; one iteration = admit under the chunked-
     prefill token budget (prefills join the running batch), then one decode
-    step for all running requests;
+    step for all previously-running requests;
   * KV pressure from the cost model's capacity estimate gates admission;
   * MoE expert imbalance couples engines through the hotspot multiplier
     (max expert load / mean) and affinity cut fraction produced by the
-    EXPERT-LEVEL placement — the same numbers core/placement.py optimizes;
+    EXPERT-LEVEL placement — one SyntheticExpertLevel (core/eplb.py) shared
+    by all engines, same Algorithm 3 driver and RebalanceEvent stream as
+    serving;
   * expert relocation (every tau steps) costs migration bytes on the links.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.core.affinity import synthetic_stats
-from repro.core.gimbal import make_router, variant_flags
-from repro.core.placement import (comm_cut, eplb_placement, gimbal_placement,
-                                  migration_cost, perm_to_assignment,
-                                  row_imbalance, static_placement)
-from repro.core.preempt import (eligible_victims, reset_for_resume,
-                                select_victim)
-from repro.core.sjf import fcfs_order, sjf_order
-from repro.core.types import (PRIORITY_CLASSES, EngineMetrics, GimbalConfig,
-                              Request)
+from repro.core.gimbal import make_router, make_sim_expert_level, variant_flags
+from repro.core.prefix_cache import PrefixCache
+from repro.core.scheduler import SchedulerCore
+from repro.core.sjf import SJFQueue
+from repro.core.types import EngineMetrics, GimbalConfig, Request
 from repro.models.config import ModelConfig
 from repro.serving.metrics import (LatencyReport, MetricsBus, summarize,
                                    summarize_by_class)
-from repro.serving.prefix_cache import PrefixCache
+from repro.sim.backend import CostModelBackend
 from repro.sim.costmodel import CostModel, HardwareProfile, PROFILES
 
 
-@dataclasses.dataclass
 class SimEngine:
-    engine_id: int
-    cost: CostModel
-    gcfg: GimbalConfig
-    sjf: bool
-    prefill_budget: int = 2048
-    max_running: int = 256
-    kv_pool_tokens: int = 0      # 0 -> cost-model estimate
+    """Thin shell: SchedulerCore + CostModelBackend (vLLM-style continuous
+    batching, per §V-A.1)."""
 
-    def __post_init__(self):
-        self.waiting: List[Request] = []
-        self.running: List[Request] = []   # decoding requests
-        self.ctx_tokens: Dict[int, int] = {}
-        self.kv_capacity = self.kv_pool_tokens or self.cost.kv_capacity_tokens()
-        self.busy_until = 0.0
+    def __init__(self, engine_id: int, cost: CostModel, gcfg: GimbalConfig,
+                 sjf: bool, expert_level, *, prefill_budget: int = 2048,
+                 max_running: int = 256, kv_pool_tokens: int = 0):
+        self.engine_id = engine_id
+        self.backend = CostModelBackend(cost, expert_level,
+                                        max_running=max_running,
+                                        kv_pool_tokens=kv_pool_tokens)
         # vLLM's prefix cache IS the KV block pool: bound + LRU-churn it
-        self.prefix = PrefixCache(capacity_blocks=max(self.kv_capacity // 16, 256))
-        self.kv_tokens = 0
-        self.preemptions = 0
-
-    # --- metrics (Alg. 1 inputs) ---------------------------------------------
-    def metrics(self, now: float) -> EngineMetrics:
-        return EngineMetrics(
-            engine_id=self.engine_id,
-            kv_usage=min(self.kv_tokens / self.kv_capacity, 1.0),
-            running_load=sum(self.ctx_tokens.values())
-            + sum(r.prompt_len for r in self.waiting),
-            num_running=len(self.running), num_waiting=len(self.waiting),
-            timestamp=now, healthy=True)
+        prefix = PrefixCache(
+            capacity_blocks=max(self.backend.kv_capacity // 16, 256))
+        self.core = SchedulerCore(
+            self.backend, SJFQueue(gcfg, policy="sjf" if sjf else "fcfs"),
+            gcfg, prefill_budget=prefill_budget, engine_id=engine_id,
+            expert_level=expert_level, prefix_cache=prefix)
 
     def submit(self, r: Request, now: float) -> None:
-        if r.prompt_tokens is not None:
-            toks = list(np.asarray(r.prompt_tokens).reshape(-1))
-            r._cached = self.prefix.match(toks, now)      # type: ignore
-            self.prefix.insert(toks, now)
-        self.waiting.append(r)
+        self.core.submit(r, now)
 
-    def _blocked(self, r: Request, n_admitted: int) -> bool:
-        """Admission blocked for `r` under the batch/KV-capacity limits."""
-        return (len(self.running) + n_admitted >= self.max_running
-                or self.kv_tokens + r.prompt_len > self.kv_capacity)
+    def metrics(self, now: float) -> EngineMetrics:
+        return self.core.metrics(now)
 
-    def _eviction_unblocks(self, r: Request, n_admitted: int) -> bool:
-        """True iff evicting every preemptible victim would make `r` fit —
-        the feasibility gate before destroying any batch progress."""
-        evictable = [v for _, v in eligible_victims(
-            [(None, x) for x in self.running], r.rank, self.gcfg)]
-        kv_after = self.kv_tokens - sum(self.ctx_tokens[v.req_id]
-                                        for v in evictable)
-        run_after = len(self.running) - len(evictable) + n_admitted
-        return (run_after < self.max_running
-                and kv_after + r.prompt_len <= self.kv_capacity)
-
-    def _evict_for(self, rank: int) -> Optional[Request]:
-        """Evict one running request preemptible by class `rank`, returning
-        it to the waiting queue with KV released and generation state reset
-        (recompute-on-resume; the conservative `_cached = 0` re-charges the
-        full prefill)."""
-        pick = select_victim([(None, r) for r in self.running], rank, self.gcfg)
-        if pick is None:
-            return None
-        v = pick[1]
-        self.running.remove(v)
-        self.kv_tokens -= self.ctx_tokens.pop(v.req_id)
-        reset_for_resume(v)
-        v._cached = 0                                   # type: ignore
-        self.waiting.append(v)
-        self.preemptions += 1
-        return v
-
-    def iterate(self, now: float, moe_mult: float, cross_frac: float
-                ) -> Tuple[float, List[Request]]:
-        """One continuous-batching iteration starting at `now`.
+    def iterate(self, now: float) -> Tuple[float, List[Request]]:
+        """One continuous-batching iteration starting at ``now``.
         Returns (iteration latency, finished requests)."""
-        # 1) request-level scheduling (Alg. 2 vs FCFS)
-        order = sjf_order(self.waiting, now, self.gcfg) if self.sjf \
-            else fcfs_order(self.waiting, now)
-        budget = self.prefill_budget
-        admitted: List[Request] = []
-        blocked_rank = len(PRIORITY_CLASSES) + 1   # most-urgent rank blocked so far
-        for r in list(order):
-            # head-blocking per class: once a request of some rank is blocked
-            # (on KV, batch size, OR budget), equal-or-less-urgent requests
-            # behind it may not leapfrog it and steal what it is waiting for
-            if r.rank >= blocked_rank:
-                continue
-            need = r.prompt_len - getattr(r, "_cached", 0)
-            if need > budget and admitted:
-                if self.gcfg.enable_preemption:
-                    # budget-blocked head: strictly-more-urgent requests
-                    # behind it may still be scanned (symmetric with the
-                    # KV/batch-blocked case below)
-                    blocked_rank = min(blocked_rank, r.rank)
-                    continue
-                break
-            # priority preemption: evict lower-class running work to make
-            # room, but only for requests admissible this iteration (budget-
-            # gated above) and only when eviction can actually unblock r —
-            # otherwise batch progress is destroyed for zero benefit
-            if (self.gcfg.enable_preemption
-                    and self._blocked(r, len(admitted))
-                    and self._eviction_unblocks(r, len(admitted))):
-                while (self._blocked(r, len(admitted))
-                       and self._evict_for(r.rank) is not None):
-                    pass
-            if self._blocked(r, len(admitted)):
-                if self.gcfg.enable_preemption:
-                    # keep scanning: a strictly-more-urgent request behind a
-                    # blocked (e.g. aged-batch) head must reach its victims
-                    blocked_rank = min(blocked_rank, r.rank)
-                    continue
-                break
-            budget -= need
-            admitted.append(r)
-            self.kv_tokens += r.prompt_len
-            self.waiting.remove(r)
-
-        prefill_tokens = sum(r.prompt_len - getattr(r, "_cached", 0)
-                             for r in admitted)
-        decode_batch = len(self.running)
-        avg_ctx = (np.mean([self.ctx_tokens[r.req_id] for r in self.running])
-                   if self.running else 0.0)
-        dt = self.cost.iteration_time(prefill_tokens, decode_batch, avg_ctx,
-                                      moe_mult, cross_frac,
-                                      queue_len=len(self.waiting))
-        end = now + dt
-
-        finished: List[Request] = []
-        for r in admitted:                       # first token produced now
-            r.first_token_time = end
-            r.generated = 1
-            self.ctx_tokens[r.req_id] = r.prompt_len + 1
-            self.kv_tokens += 1                  # keep kv_tokens == sum(ctx)
-            self.running.append(r)
-        for r in list(self.running):
-            if r in admitted:
-                continue
-            r.generated += 1
-            self.ctx_tokens[r.req_id] += 1
-            self.kv_tokens += 1                  # decode growth holds KV too
-            if r.generated >= r.max_new_tokens:
-                r.finish_time = end
-                finished.append(r)
-                self.running.remove(r)
-                self.kv_tokens -= self.ctx_tokens.pop(r.req_id)
-        return dt, finished
+        end, finished = self.core.step(now)
+        return end - now, finished
 
     @property
     def idle(self) -> bool:
-        return not self.waiting and not self.running
+        return self.core.idle
 
+    @property
+    def prefix(self) -> PrefixCache:
+        return self.core.prefix
 
-class ExpertState:
-    """Cluster-wide expert placement state (experts are EP-sharded across all
-    engines' devices, §V-A.1) driving (moe_mult, cross_frac)."""
-
-    def __init__(self, cfg: ModelConfig, g: int, policy: str,
-                 gcfg: GimbalConfig, seed: int = 0):
-        self.cfg = cfg
-        self.g = g
-        self.policy = policy            # static | eplb | gimbal
-        self.gcfg = gcfg
-        self.steps = 0
-        self.migrations = 0
-        self.bytes_moved = 0
-        if cfg.is_moe:
-            import jax
-            self.A, self.W, _ = synthetic_stats(
-                jax.random.key(seed), max(cfg.num_moe_layers(), 1),
-                cfg.num_experts, top_k=cfg.moe_top_k)
-            self.perm = static_placement(cfg.num_experts, g)
-            self._update_factors()
-        else:
-            self.moe_mult, self.cross_frac = 1.0, 0.0
-
-    def _update_factors(self) -> None:
-        assign = perm_to_assignment(self.perm, self.g)
-        onehot = np.eye(self.g)[assign]
-        loads = self.A @ onehot                       # (L, g)
-        # hotspot multiplier: hottest device load / mean (per layer, averaged)
-        self.moe_mult = float(np.mean(loads.max(1) / np.maximum(loads.mean(1), 1e-9)))
-        total = self.W.sum()
-        self.cross_frac = float(comm_cut(self.W, assign) / max(total, 1e-9))
-
-    def tick(self, n_steps: int = 1) -> float:
-        """Advance; returns migration latency when a relocation fires."""
-        if not self.cfg.is_moe or self.policy == "static":
-            return 0.0
-        self.steps += n_steps
-        if self.steps < self.gcfg.tau:
-            return 0.0
-        self.steps -= self.gcfg.tau
-        new_perm = (eplb_placement(self.A, self.g) if self.policy == "eplb"
-                    else gimbal_placement(self.A, self.W, self.g))
-        per_expert = 3 * self.cfg.d_model * self.cfg.moe_d_ff * 2 \
-            * max(self.cfg.num_moe_layers(), 1)
-        moved, nbytes = migration_cost(self.perm, new_perm, self.g, per_expert)
-        self.perm = new_perm
-        self._update_factors()
-        self.migrations += 1
-        self.bytes_moved += nbytes
-        return 0.0  # migration overlapped with serving; bytes tracked
+    @property
+    def preemptions(self) -> int:
+        return self.core.preemptions
 
 
 @dataclasses.dataclass
@@ -277,13 +114,11 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
     flags = variant_flags(variant)
     router = make_router(variant, list(range(n_engines)), gcfg)
     bus = MetricsBus(delay=metric_delay)
-    policy = ("gimbal" if flags["edr"] else "static") if cfg.is_moe else "static"
-    if variant == "eplb":                     # extra baseline: count-only EPLB
-        policy = "eplb"
-    experts = ExpertState(cfg, n_engines, policy, gcfg, seed)
+    experts = make_sim_expert_level(variant, cfg, n_engines, gcfg, seed=seed)
 
     engines = [SimEngine(i, CostModel(cfg, hwp, n_engines), gcfg, flags["sjf"],
-                         prefill_budget=prefill_budget, max_running=max_running,
+                         experts, prefill_budget=prefill_budget,
+                         max_running=max_running,
                          kv_pool_tokens=kv_pool_tokens)
                for i in range(n_engines)]
     reqs = sorted(requests, key=lambda r: r.arrival_time)
@@ -311,11 +146,10 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
         eid = min(busy)[1]
         eng = engines[eid]
         now = t_engine[eid]
-        dt, done = eng.iterate(now, experts.moe_mult, experts.cross_frac)
+        dt, done = eng.iterate(now)
         t_engine[eid] = now + dt
         steps[eid] += 1
         finished.extend(done)
-        experts.tick()
         bus.publish(eng.metrics(t_engine[eid]))
 
     hits = sum(e.prefix.hit_blocks for e in engines)

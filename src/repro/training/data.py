@@ -12,7 +12,7 @@ important when exercising the paper's expert-hotspot machinery (Fig. 3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 

@@ -12,7 +12,7 @@ dry-run memory budget; fp32 is available for the small-scale functional runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

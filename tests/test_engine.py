@@ -3,8 +3,6 @@ tolerance, EDR relocation invariance, prefix-cache/user-affinity — all with
 REAL jax model execution on reduced configs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core.types import GimbalConfig, Request
 from repro.models import model as M
@@ -51,6 +49,39 @@ def test_engine_completes_requests():
     assert all(r.ttft is not None for r in done)
 
 
+def test_prefill_jit_memoized_by_bucket():
+    """Prefills of distinct lengths inside one padding bucket reuse the same
+    compiled prefill fn (cache keyed on _bucket(plen), no re-trace); a new
+    bucket compiles exactly once more."""
+    e = make_engine()
+    for i, plen in enumerate((5, 6, 7)):        # all pad to bucket 16
+        e.submit(Request(req_id=i, prompt_len=plen, max_new_tokens=2,
+                         arrival_time=0.0), 0.0)
+    e.step(0.0)
+    info = e.backend.prefill_cache_info()
+    assert info.misses == 1 and info.hits == 2
+    e.submit(Request(req_id=9, prompt_len=20, max_new_tokens=2,
+                     arrival_time=0.1), 0.1)    # bucket 32
+    e.step(1.0)
+    info = e.backend.prefill_cache_info()
+    assert info.misses == 2
+
+
+def test_engine_serves_prompt_longer_than_kv_pool():
+    """A prompt longer than the entire KV pool is truncated by the backend
+    (to the slot length); the core's pool accounting must charge only what
+    physically materializes, not starve the request at the capacity gate."""
+    e = make_engine()            # max_slots=4, max_seq=64 -> 256-token pool
+    e.submit(Request(req_id=0, prompt_len=300, max_new_tokens=3,
+                     arrival_time=0.0), 0.0)
+    done = []
+    for s in range(10):
+        done += e.step(float(s))
+        if done:
+            break
+    assert len(done) == 1 and done[0].generated >= 3
+
+
 def test_engine_metrics_track_load():
     e = make_engine()
     assert e.metrics(0.0).running_load == 0
@@ -77,7 +108,6 @@ def test_edr_relocation_preserves_outputs():
         rs = reqs(2, plen=6, out=8)
         for r in rs:
             e.submit(r, 0.0)
-        toks = []
         for step in range(30):
             e.step(float(step))
             if all(r.finish_time is not None for r in rs):

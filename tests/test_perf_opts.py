@@ -11,7 +11,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.context import ShardCtx, shard_ctx
 from repro.models import model as M

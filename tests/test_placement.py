@@ -34,6 +34,23 @@ def test_perm_assignment_roundtrip(g, per, seed):
     np.testing.assert_array_equal(perm_to_assignment(perm, g), assign)
 
 
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(0, 10**6))
+@settings(max_examples=50, deadline=None)
+def test_canonical_perm_roundtrip(g, per, seed):
+    """Placements produced by every policy are canonical: mapping to an
+    assignment and packing back reproduces the identical perm."""
+    m = g * per
+    rng = np.random.default_rng(seed)
+    A = rng.random((3, m)) + 0.1
+    W = rng.random((m, m)) * 0.1
+    np.fill_diagonal(W, 0.0)
+    for perm in (static_placement(m, g), eplb_placement(A, g),
+                 gimbal_placement(A, W, g, top_e=4)):
+        assert sorted(perm) == list(range(m))             # true permutation
+        np.testing.assert_array_equal(
+            assignment_to_perm(perm_to_assignment(perm, g), g), perm)
+
+
 # --- capacity + anchoring (Alg. 3) ---------------------------------------------
 
 @given(st.integers(0, 10**6), st.integers(2, 4), st.integers(2, 6))
@@ -48,8 +65,40 @@ def test_gimbal_placement_capacity(seed, g, per):
     assert (counts == m // g).all()                   # Eq. 4 hard constraint
 
 
+@given(st.integers(0, 10**6), st.integers(2, 4), st.integers(2, 6))
+@settings(max_examples=50, deadline=None)
+def test_eplb_placement_capacity_and_validity(seed, g, per):
+    """EPLB obeys the Eq. 4 hard capacity constraint and emits a true
+    permutation on arbitrary hot-spotted instances."""
+    m = g * per
+    rng = np.random.default_rng(seed)
+    A, _ = rand_instance(rng, m=m, g=g)
+    perm = eplb_placement(A, g)
+    assert sorted(perm) == list(range(m))
+    counts = np.bincount(perm_to_assignment(perm, g), minlength=g)
+    assert (counts == per).all()
+
+
+@given(st.integers(0, 10**6), st.integers(2, 4), st.integers(2, 6),
+       st.integers(0, 3))
+@settings(max_examples=50, deadline=None)
+def test_gimbal_anchor_hosts_strongest_pair(seed, g, per, anchor_pick):
+    """Alg. 3 line 2 invariant: whatever the instance and whichever device is
+    the anchor, the single strongest inter-layer affinity pair ends up
+    co-located on the anchor device (capacity per >= 2 always admits it)."""
+    m = g * per
+    rng = np.random.default_rng(seed)
+    A, W = rand_instance(rng, m=m, g=g)
+    anchor = anchor_pick % g
+    perm = gimbal_placement(A, W, g, anchor=anchor, top_e=4)
+    assign = perm_to_assignment(perm, g)
+    w = W.copy()
+    np.fill_diagonal(w, 0.0)
+    j, k = divmod(int(np.argmax(w)), m)
+    assert assign[j] == anchor and assign[k] == anchor
+
+
 def test_gimbal_placement_anchors_affine_pair():
-    rng = np.random.default_rng(0)
     A = np.ones((2, 8))
     W = np.zeros((8, 8))
     W[2, 5] = 100.0                                   # one strong dependency

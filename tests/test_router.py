@@ -1,5 +1,4 @@
 """Engine-level scheduling (paper Algorithm 1) unit + property tests."""
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.router import GimbalRouter, RoundRobinRouter
@@ -80,7 +79,7 @@ def test_affinity_expires():
     cfg = GimbalConfig(affinity_ttl=1.0)
     r = GimbalRouter([0, 1], cfg)
     m = metrics(0.0, {0: (0.2, 0), 1: (0.2, 0)})
-    e1 = r.select(req(0, user="c"), m, now=0.0)
+    r.select(req(0, user="c"), m, now=0.0)
     # far beyond TTL: falls back to RR rotation, not necessarily e1
     m2 = metrics(100.0, {0: (0.2, 0), 1: (0.2, 0)})
     picks = {r.select(req(i, user=f"u{i}"), m2, now=100.0) for i in range(2)}

@@ -8,11 +8,10 @@ import jax.numpy as jnp
 
 from repro.training.checkpoint import (latest_step, restore_checkpoint,
                                        save_checkpoint)
-from repro.training.compression import (TopKState, dequantize_int8,
-                                        quantize_int8, topk_compress,
-                                        topk_init)
+from repro.training.compression import (dequantize_int8, quantize_int8,
+                                        topk_compress, topk_init)
 from repro.training.data import DataConfig, TokenStream, pack_documents
-from repro.training.optimizer import (AdamWConfig, adamw_update, global_norm,
+from repro.training.optimizer import (AdamWConfig, adamw_update,
                                       init_adamw, lr_schedule)
 
 
