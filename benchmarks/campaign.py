@@ -1,0 +1,420 @@
+"""Campaign runner: the declarative (variant × workload × arrival × rps ×
+seed) experiment matrix behind the paper's "more than 100 experiments".
+
+``python -m benchmarks.campaign [--quick|--smoke] [--jobs N]``
+
+Replaces the ad-hoc sequential sweep that used to live in benchmarks/run.py:
+
+  * the matrix is **declarative** — a ``Matrix`` names its axes and the cell
+    list is their cross product; presets: ``full`` (the kitchen sink),
+    ``quick`` (≥100 cells, minutes on CPU — the paper-breadth demonstrator),
+    ``smoke`` (a handful of cells for CI), ``ablation`` (the §V-A.7
+    five-variant sweep benchmarks/run.py delegates to);
+  * cells run **in parallel** across processes (each is an independent
+    deterministic simulation);
+  * the run is **resumable**: every finished cell lands in a schema-versioned
+    result cache (``benchmarks/artifacts/campaign_cache.json``) flushed
+    incrementally, so an interrupted campaign continues where it stopped and
+    completed cells are never re-simulated;
+  * output is one consolidated ``BENCH_campaign.json`` plus an auto-generated
+    markdown report (``docs/results.md``) with per-cell TTFT/TPOT and
+    per-class SLO-attainment/goodput tables mirroring the paper's §V layout.
+
+Workload axis syntax: ``mix:<suite>`` is a multi-tenant SLO-labeled mix from
+``repro.workloads.tenants.SUITES``; ``bgpt:<dist>`` is the paper's original
+single-tenant BurstGPT shape (Fig. 5) with no SLOs — the control cells.
+Variant axis: the paper's five ablations plus ``gimbal_p`` (gimbal with
+preemptive priority scheduling, the beyond-paper mixed-tenant mode).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import json
+import os
+import sys
+import time
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+ART = Path(__file__).resolve().parent / "artifacts"
+DOCS = Path(__file__).resolve().parent.parent / "docs"
+
+# Bump whenever cell semantics change (simulator, workloads, SLO accounting):
+# a stale cache would silently report pre-change numbers.  1 = first campaign
+# (SchedulerCore schema 2 + SLO-goodput accounting); 2 = arrival draws moved
+# to a spawned generator so lengths are paired across the arrival axis.
+CAMPAIGN_SCHEMA = 2
+
+MODEL = "qwen3-30b-a3b"
+N_ENGINES = 2
+KV_POOL = 60_000
+MMPP_BURSTINESS = 4.0           # benchmarks/common.py calibration
+CAMPAIGN_VARIANTS = ("vllm", "dplb", "sjfs", "edr", "gimbal", "gimbal_p")
+# the cost-model operating points (benchmarks/common.py maps these onto the
+# paper's 1.0/1.2/1.4 RPS at equal utilization)
+RPS_GRID = (7.14, 8.57, 10.0)
+PAPER_RPS_LABELS = ("1.0", "1.2", "1.4")
+
+
+@dataclasses.dataclass(frozen=True)
+class Matrix:
+    """One campaign: the cross product of these axes."""
+    name: str
+    variants: Tuple[str, ...]
+    workloads: Tuple[str, ...]          # "mix:<suite>" | "bgpt:<dist>"
+    arrivals: Tuple[str, ...]           # workloads/arrivals.py registry keys
+    rps: Tuple[float, ...]
+    seeds: Tuple[int, ...]
+    n_requests: int = 400
+
+    def cells(self) -> List[Dict]:
+        out = []
+        for v, w, a, r, s in itertools.product(
+                self.variants, self.workloads, self.arrivals, self.rps,
+                self.seeds):
+            out.append({"variant": v, "workload": w, "arrival": a,
+                        "rps": r, "seed": s, "n": self.n_requests})
+        return out
+
+
+def cell_key(c: Dict) -> str:
+    return (f"{c['variant']}|{c['workload']}|{c['arrival']}|{c['rps']}"
+            f"|{c['seed']}|{c['n']}|{MODEL}")
+
+
+MATRICES: Dict[str, Matrix] = {
+    # every variant × every scenario: the full reproduction-and-beyond grid
+    "full": Matrix(
+        name="full",
+        variants=CAMPAIGN_VARIANTS,
+        workloads=("mix:chat_vs_batch", "mix:agents_vs_eval",
+                   "mix:three_tier", "mix:uniform",
+                   "bgpt:random", "bgpt:central", "bgpt:descending",
+                   "bgpt:two-end", "bgpt:average"),
+        arrivals=("poisson", "mmpp", "gamma", "diurnal", "flash"),
+        rps=RPS_GRID,
+        seeds=(0, 1, 2),
+        n_requests=400),
+    # ≥100 cells in minutes on CPU: the acceptance-criterion matrix
+    "quick": Matrix(
+        name="quick",
+        variants=("vllm", "sjfs", "gimbal", "gimbal_p"),
+        workloads=("mix:chat_vs_batch", "mix:three_tier", "bgpt:random"),
+        arrivals=("poisson", "mmpp", "flash"),
+        rps=(8.57, 10.0),
+        seeds=(0, 1),
+        n_requests=200),
+    # CI-sized: exercises every moving part (mix + bgpt workloads, two
+    # arrival processes, preemptive variant, resume path) in seconds
+    "smoke": Matrix(
+        name="smoke",
+        variants=("vllm", "gimbal_p"),
+        workloads=("mix:chat_vs_batch", "bgpt:random"),
+        arrivals=("mmpp", "flash"),
+        rps=(10.0,),
+        seeds=(0,),
+        n_requests=60),
+    # the paper's §V-A.7 ablation table (benchmarks/run.py delegates here)
+    "ablation": Matrix(
+        name="ablation",
+        variants=("vllm", "dplb", "sjfs", "edr", "gimbal"),
+        workloads=("bgpt:random",),
+        arrivals=("mmpp",),
+        rps=RPS_GRID,
+        seeds=(0, 1),
+        n_requests=400),
+}
+
+
+# ---------------------------------------------------------------- cell worker
+def build_trace(workload: str, arrival: str, rps: float, seed: int, n: int):
+    from repro.workloads import burstgpt_trace, suite_trace
+    kind, _, name = workload.partition(":")
+    if kind == "mix":
+        kw = {"burstiness": MMPP_BURSTINESS} if arrival == "mmpp" else {}
+        return suite_trace(name, n=n, arrival=arrival, rps=rps, seed=seed,
+                           **kw)
+    if kind == "bgpt":
+        return burstgpt_trace(n=n, distribution=name, rps=rps, seed=seed,
+                              burstiness=MMPP_BURSTINESS, arrival=arrival)
+    raise ValueError(f"unknown workload {workload!r} "
+                     "(expected 'mix:<suite>' or 'bgpt:<dist>')")
+
+
+def _report_cols(rep) -> Dict[str, float]:
+    return {"mean_ttft": rep.mean_ttft, "p99_ttft": rep.p99_ttft,
+            "mean_tpot": rep.mean_tpot, "p99_tpot": rep.p99_tpot,
+            "throughput_tok_s": rep.throughput_tok_s,
+            "slo_attainment": rep.slo_attainment,
+            "goodput_tok_s": rep.goodput_tok_s,
+            "goodput_req_s": rep.goodput_req_s}
+
+
+def run_cell(cell: Dict) -> Dict:
+    """Simulate one (variant × workload × arrival × rps × seed) cell.
+    Deterministic in the cell key; safe to run in a worker process."""
+    from repro.configs import get_config
+    from repro.core.types import GimbalConfig
+    from repro.sim.simulator import simulate
+
+    variant = cell["variant"]
+    gcfg = None
+    if variant == "gimbal_p":
+        variant, gcfg = "gimbal", GimbalConfig(enable_preemption=True)
+    trace = build_trace(cell["workload"], cell["arrival"], cell["rps"],
+                        cell["seed"], cell["n"])
+    t0 = time.time()
+    res = simulate(trace, variant, get_config(MODEL), n_engines=N_ENGINES,
+                   hw="a100", gcfg=gcfg, kv_pool_tokens=KV_POOL,
+                   seed=cell["seed"])
+    row = dict(cell)
+    row.update(_report_cols(res.report))
+    row["preemptions"] = res.preemptions
+    row["migrations"] = res.migrations
+    row["by_class"] = {c: _report_cols(rep)
+                       for c, rep in res.report_by_class.items()}
+    row["by_tenant"] = {t: _report_cols(rep)
+                        for t, rep in res.report_by_tenant.items()}
+    row["slo_cells"] = res.slo
+    row["wall_s"] = time.time() - t0
+    return row
+
+
+# ---------------------------------------------------------------- result cache
+class CampaignCache:
+    """Schema-versioned per-cell results; flushed incrementally so an
+    interrupted campaign resumes from the completed cells."""
+
+    def __init__(self, path: Path = ART / "campaign_cache.json",
+                 flush_every: int = 16):
+        self.path = path
+        self.flush_every = flush_every
+        self._dirty = 0
+        self.rows: Dict[str, Dict] = {}
+        if path.exists():
+            try:
+                disk = json.loads(path.read_text())
+            except json.JSONDecodeError:
+                disk = {}       # truncated by a mid-write kill: start fresh
+            if disk.get("_schema") == CAMPAIGN_SCHEMA:
+                self.rows = {k: v for k, v in disk.items() if k != "_schema"}
+
+    def put(self, key: str, row: Dict) -> None:
+        self.rows[key] = row
+        self._dirty += 1
+        if self._dirty >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        ART.mkdir(exist_ok=True)
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps({"_schema": CAMPAIGN_SCHEMA, **self.rows}))
+        os.replace(tmp, self.path)      # atomic: never a half-written cache
+        self._dirty = 0
+
+
+# ---------------------------------------------------------------- report
+def _fmt(x: float) -> str:
+    if x != x:                          # NaN
+        return "—"
+    if abs(x) >= 100:
+        return f"{x:.0f}"
+    return f"{x:.3g}"
+
+
+def _mean_over_seeds(rows: Sequence[Dict], field: str,
+                     group: Optional[str] = None,
+                     sub: Optional[str] = None) -> float:
+    vals = []
+    for r in rows:
+        v = r[group].get(sub, {}).get(field) if group else r.get(field)
+        if v is not None and v == v:
+            vals.append(v)
+    return sum(vals) / len(vals) if vals else float("nan")
+
+
+def render_report(rows: List[Dict], matrix: Matrix) -> str:
+    """docs/results.md: per-(workload, arrival) tables mirroring the paper's
+    §V layout — one row per (variant, rps) averaged over seeds, with
+    TTFT/TPOT, SLO-attainment and goodput columns plus the per-class
+    attainment split."""
+    classes = sorted({c for r in rows for c in r["by_class"]})
+    lines = [
+        "# Campaign results",
+        "",
+        "<!-- AUTO-GENERATED by `python -m benchmarks.campaign` — do not edit"
+        " by hand; re-run the campaign to refresh. -->",
+        "",
+        f"Matrix `{matrix.name}`: {len(rows)} cells = "
+        f"{len(matrix.variants)} variants × {len(matrix.workloads)} workloads"
+        f" × {len(matrix.arrivals)} arrivals × {len(matrix.rps)} rates × "
+        f"{len(matrix.seeds)} seeds (n={matrix.n_requests} requests/cell, "
+        f"model `{MODEL}`, {N_ENGINES} engines, {KV_POOL} KV tokens).",
+        "",
+        "Latencies in simulator seconds; **goodput** counts only tokens from"
+        " requests that met their TTFT/TPOT deadlines, and **attainment**"
+        " grades only requests that carried a target (SLO-less cells show"
+        " 1.0 with goodput = throughput). See docs/experiments.md for the"
+        " paper mapping and docs/scheduling.md for the SLO semantics.",
+        "",
+    ]
+    for w in matrix.workloads:
+        lines.append(f"## Workload `{w}`")
+        lines.append("")
+        for a in matrix.arrivals:
+            cell_rows = [r for r in rows
+                         if r["workload"] == w and r["arrival"] == a]
+            if not cell_rows:
+                continue
+            lines.append(f"### Arrival process `{a}`")
+            lines.append("")
+            hdr = (["variant", "rps", "mean TTFT", "p99 TTFT", "mean TPOT",
+                    "goodput tok/s", "SLO attain"]
+                   + [f"attain:{c}" for c in classes])
+            lines.append("| " + " | ".join(hdr) + " |")
+            lines.append("|" + "---|" * len(hdr))
+            for v in matrix.variants:
+                for rps in matrix.rps:
+                    sel = [r for r in cell_rows
+                           if r["variant"] == v and r["rps"] == rps]
+                    if not sel:
+                        continue
+                    per_class = []
+                    for c in classes:
+                        if any(c in r["by_class"] for r in sel):
+                            per_class.append(_fmt(_mean_over_seeds(
+                                sel, "slo_attainment", "by_class", c)))
+                        else:
+                            per_class.append("—")
+                    lines.append("| " + " | ".join(
+                        [v, _fmt(rps),
+                         _fmt(_mean_over_seeds(sel, "mean_ttft")),
+                         _fmt(_mean_over_seeds(sel, "p99_ttft")),
+                         _fmt(_mean_over_seeds(sel, "mean_tpot")),
+                         _fmt(_mean_over_seeds(sel, "goodput_tok_s")),
+                         _fmt(_mean_over_seeds(sel, "slo_attainment"))]
+                        + per_class) + " |")
+            lines.append("")
+    return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------- driver
+def run_campaign(matrix: Matrix, jobs: int = 0,
+                 out_json: Path = ART / "BENCH_campaign.json",
+                 out_md: Optional[Path] = DOCS / "results.md",
+                 cache: Optional[CampaignCache] = None,
+                 verbose: bool = True) -> List[Dict]:
+    """Run (or resume) every cell of ``matrix``; returns the row list in
+    deterministic cell order and writes the JSON artifact + markdown
+    report."""
+    cache = cache or CampaignCache()
+    cells = matrix.cells()
+    todo = [c for c in cells if cell_key(c) not in cache.rows]
+    if verbose:
+        print(f"# campaign '{matrix.name}': {len(cells)} cells "
+              f"({len(cells) - len(todo)} cached, {len(todo)} to run)")
+    t0 = time.time()
+    if todo:
+        jobs = jobs or min(os.cpu_count() or 1, 8)
+        try:
+            if jobs <= 1:
+                for i, c in enumerate(todo):
+                    cache.put(cell_key(c), run_cell(c))
+                    if verbose and (i + 1) % 25 == 0:
+                        print(f"#   {i + 1}/{len(todo)} cells "
+                              f"({time.time() - t0:.0f}s)")
+            else:
+                with ProcessPoolExecutor(max_workers=jobs) as pool:
+                    futs = {pool.submit(run_cell, c): c for c in todo}
+                    pending, n_done = set(futs), 0
+                    while pending:
+                        done, pending = wait(pending,
+                                             return_when=FIRST_COMPLETED)
+                        for f in done:
+                            cache.put(cell_key(futs[f]), f.result())
+                            n_done += 1
+                            if verbose and n_done % 25 == 0:
+                                print(f"#   {n_done}/{len(todo)} cells "
+                                      f"({time.time() - t0:.0f}s)")
+        finally:
+            # a failing cell must not cost the completed ones their place in
+            # the cache ("completed cells are never re-simulated")
+            cache.flush()
+    rows = [cache.rows[cell_key(c)] for c in cells]
+    out_json.parent.mkdir(exist_ok=True)
+    out_json.write_text(json.dumps(
+        {"schema": CAMPAIGN_SCHEMA, "matrix": dataclasses.asdict(matrix),
+         "rows": rows}, indent=1))
+    if out_md is not None:
+        out_md.parent.mkdir(exist_ok=True)
+        out_md.write_text(render_report(rows, matrix))
+    if verbose:
+        print(f"# campaign '{matrix.name}' done: {len(rows)} cells in "
+              f"{time.time() - t0:.1f}s -> {out_json}"
+              + (f" + {out_md}" if out_md is not None else ""))
+    return rows
+
+
+def run_ablation_compat(variants: Sequence[str], quick: bool) -> List[Dict]:
+    """The §V-A.7 ablation sweep benchmarks/run.py used to hand-roll: run it
+    through the campaign machinery and also emit the historical
+    ``BENCH_ablation.json`` row format."""
+    base = MATRICES["ablation"]
+    matrix = dataclasses.replace(
+        base, variants=tuple(variants),
+        rps=base.rps[-1:] if quick else base.rps,
+        seeds=(0,) if quick else base.seeds)
+    rows = run_campaign(matrix, out_md=None,
+                        out_json=ART / "BENCH_campaign_ablation.json")
+    labels = dict(zip(RPS_GRID, PAPER_RPS_LABELS))
+    compat = [{"variant": r["variant"], "paper_rps": labels[r["rps"]],
+               "rps": r["rps"], "seed": r["seed"],
+               "mean_ttft": r["mean_ttft"], "p99_ttft": r["p99_ttft"],
+               "mean_tpot": r["mean_tpot"], "p99_tpot": r["p99_tpot"],
+               "throughput_tok_s": r["throughput_tok_s"],
+               "migrations": r["migrations"]} for r in rows]
+    ART.mkdir(exist_ok=True)
+    (ART / "BENCH_ablation.json").write_text(json.dumps(compat, indent=1))
+    return rows
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="declarative (variant × workload × arrival × rps × seed)"
+                    " campaign runner; resumable, parallel")
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--quick", action="store_true",
+                      help="≥100-cell matrix, minutes on CPU")
+    size.add_argument("--smoke", action="store_true",
+                      help="CI-sized handful of cells")
+    size.add_argument("--preset", choices=tuple(MATRICES), default=None,
+                      help="pick a matrix by name (overrides --quick/--smoke)")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="worker processes (0 = min(cores, 8))")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore + overwrite the result cache")
+    args = ap.parse_args(argv)
+
+    name = args.preset or ("quick" if args.quick
+                           else "smoke" if args.smoke else "full")
+    matrix = MATRICES[name]
+    cache = CampaignCache()
+    if args.fresh:
+        cache.rows.clear()
+    # only the real matrices own the headline artifacts; smoke/ablation runs
+    # must not clobber docs/results.md or BENCH_campaign.json with toy rows
+    if name in ("quick", "full"):
+        out_md, out_json = DOCS / "results.md", ART / "BENCH_campaign.json"
+    else:
+        out_md = ART / f"results_{name}.md"
+        out_json = ART / f"BENCH_campaign_{name}.json"
+    run_campaign(matrix, jobs=args.jobs, cache=cache, out_md=out_md,
+                 out_json=out_json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,40 +1,18 @@
 """Run every benchmark (one per paper table/figure) and print consolidated
 CSV.  ``python -m benchmarks.run [--quick]``.
 
-``--variant all`` (or a single variant name) switches to the ablation sweep:
-every requested Gimbal variant is replayed through the unified SchedulerCore
-at the paper's operating points and a single ``BENCH_ablation.json`` artifact
-records TTFT/TPOT per variant — the §V-A.7 ablation table in one file.
+``--variant all`` (or a single variant name) runs the §V-A.7 ablation sweep.
+It is no longer an ad-hoc loop here: it delegates to the campaign runner
+(``benchmarks/campaign.py`` — declarative matrix, process-parallel,
+resumable) and keeps emitting the historical ``BENCH_ablation.json``.  For
+the full scenario matrix (multi-tenant workloads, five arrival processes,
+SLO-goodput columns) run ``python -m benchmarks.campaign`` directly.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
-
-
-def run_ablation(variants, quick: bool, cache) -> None:
-    """One row per (variant, rps[, seed]): TTFT/TPOT percentiles + throughput,
-    all decisions made by the unified core (sim backend)."""
-    from benchmarks.common import PAPER_RPS_LABELS, RPS_GRID, emit
-    rps_points = list(zip(RPS_GRID, PAPER_RPS_LABELS))
-    if quick:
-        rps_points = rps_points[-1:]          # saturated point only (CI mode)
-    seeds = (0,) if quick else (0, 1)
-    rows = []
-    for variant in variants:
-        for rps, label in rps_points:
-            for seed in seeds:
-                d = cache.get(variant, "random", rps, seed)
-                rows.append({
-                    "variant": variant, "paper_rps": label, "rps": rps,
-                    "seed": seed,
-                    "mean_ttft": d["mean_ttft"], "p99_ttft": d["p99_ttft"],
-                    "mean_tpot": d["mean_tpot"], "p99_tpot": d["p99_tpot"],
-                    "throughput_tok_s": d["throughput_tok_s"],
-                    "migrations": d["migrations"],
-                })
-    emit(rows, "BENCH_ablation")
 
 
 def main() -> int:
@@ -48,16 +26,17 @@ def main() -> int:
                          "('all' = the paper's five-variant ablation)")
     args = ap.parse_args()
 
-    from benchmarks.common import ResultCache
-    cache = ResultCache()
-
     if args.variant is not None:
+        from benchmarks.campaign import run_ablation_compat
         variants = VARIANTS if args.variant == "all" else (args.variant,)
         t0 = time.time()
-        run_ablation(variants, args.quick, cache)
+        run_ablation_compat(variants, args.quick)
         print(f"# [ablation {args.variant}] {time.time()-t0:.1f}s "
               f"-> artifacts/BENCH_ablation.json")
         return 0
+
+    from benchmarks.common import ResultCache
+    cache = ResultCache()
 
     from benchmarks import (bench_expert_balance, bench_kernels,
                             bench_preemption, bench_prefix, bench_throughput,

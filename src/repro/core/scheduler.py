@@ -43,6 +43,7 @@ import numpy as np
 from repro.core.preempt import (eligible_victims, reset_for_resume,
                                 select_victim)
 from repro.core.sjf import SJFQueue
+from repro.core.slo import SLOTracker
 from repro.core.types import (PRIORITY_CLASSES, EngineMetrics, GimbalConfig,
                               Request)
 from repro.core.prefix_cache import PrefixCache
@@ -128,6 +129,9 @@ class SchedulerCore:
         self.preemptions = 0
         self.healthy = True
         self.events: List[SchedEvent] = []
+        # SLO-attainment / goodput accounting per (tenant, class) — the same
+        # tracker code in both planes, parity-tested alongside the events
+        self.slo = SLOTracker()
 
     # ------------------------------------------------------------------ intake
     def submit(self, r: Request, now: float = 0.0) -> None:
@@ -333,6 +337,7 @@ class SchedulerCore:
                     self.kv_tokens -= self.ctx_tokens.pop(r.req_id)
                     self.backend.release(seq.handle, r)
                     self.events.append(SchedEvent("finish", self.steps, r.req_id))
+                    self.slo.observe(r)
         # expert-level tick (Alg. 3 lines 6-9)
         self.steps += 1
         if self.expert is not None:

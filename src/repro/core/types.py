@@ -27,6 +27,10 @@ class Request:
     user_id: Optional[str] = None    # enables Alg.1 user affinity
     prompt_tokens: Optional[object] = None  # actual tokens (functional plane only)
     priority_class: str = "batch"    # see PRIORITY_CLASSES
+    tenant: str = "default"          # multi-tenant workload label
+    # per-request SLO deadlines (None = no target on that axis)
+    slo_ttft: Optional[float] = None     # seconds to first token
+    slo_tpot: Optional[float] = None     # seconds per output token (mean)
 
     # lifecycle (filled in by the engine / simulator)
     engine_id: Optional[int] = None
@@ -54,6 +58,27 @@ class Request:
         if self.finish_time is None or self.first_token_time is None or self.generated <= 1:
             return None
         return (self.finish_time - self.first_token_time) / (self.generated - 1)
+
+    @property
+    def has_slo(self) -> bool:
+        return self.slo_ttft is not None or self.slo_tpot is not None
+
+    @property
+    def slo_met(self) -> Optional[bool]:
+        """Did this request hit its deadlines?  ``None`` until finished.
+        A request with no targets vacuously meets its SLO (goodput ==
+        throughput for SLO-less traffic); a single-token output has no TPOT
+        and can only miss on TTFT."""
+        if self.finish_time is None:
+            return None
+        if self.slo_ttft is not None:
+            if self.ttft is None or self.ttft > self.slo_ttft:
+                return False
+        if self.slo_tpot is not None:
+            t = self.tpot
+            if t is not None and t > self.slo_tpot:
+                return False
+        return True
 
 
 @dataclasses.dataclass

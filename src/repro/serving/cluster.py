@@ -17,9 +17,11 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.gimbal import make_router
+from repro.core.slo import SLOTracker
 from repro.core.types import GimbalConfig, Request
 from repro.serving.engine import Engine
-from repro.serving.metrics import MetricsBus, summarize, summarize_by_class
+from repro.serving.metrics import (MetricsBus, summarize, summarize_by_class,
+                                   summarize_by_tenant)
 
 
 class Cluster:
@@ -113,6 +115,18 @@ class Cluster:
     def report_by_class(self, horizon: Optional[float] = None):
         """Per-priority-class latency breakdown (mixed-tenant view)."""
         return summarize_by_class(self.finished, horizon)
+
+    def report_by_tenant(self, horizon: Optional[float] = None):
+        """Per-tenant latency + SLO-goodput breakdown."""
+        return summarize_by_tenant(self.finished, horizon)
+
+    def slo_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-(tenant, class) SLO counters merged across engine cores —
+        the live-engine twin of ``SimResult.slo``."""
+        slo = SLOTracker()
+        for e in self.engines.values():
+            slo.merge(e.core.slo)
+        return slo.snapshot()
 
     def preemption_stats(self) -> Dict[str, int]:
         return {"preemptions": sum(e.preemptions for e in self.engines.values())}

@@ -46,6 +46,12 @@ class LatencyReport:
     throughput_req_s: float
     preemptions: int = 0             # total slot evictions suffered
     wasted_tokens: int = 0           # generated tokens discarded by preemption
+    # SLO accounting (core/slo.py semantics): attainment grades only requests
+    # that carried a target; goodput counts only SLO-met requests/tokens.
+    # SLO-less traffic vacuously meets, so goodput == throughput there.
+    slo_attainment: float = 1.0
+    goodput_tok_s: float = 0.0
+    goodput_req_s: float = 0.0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -61,6 +67,8 @@ def summarize(requests: Sequence[Request], horizon: Optional[float] = None) -> L
     t1 = horizon if horizon is not None else max(r.finish_time for r in done)
     span = max(t1 - t0, 1e-9)
     tokens = sum(r.generated for r in done)
+    with_slo = [r for r in done if r.has_slo]
+    met = [r for r in done if r.slo_met]
     return LatencyReport(
         n=len(done),
         mean_ttft=float(np.mean(ttfts)),
@@ -72,6 +80,10 @@ def summarize(requests: Sequence[Request], horizon: Optional[float] = None) -> L
         throughput_req_s=len(done) / span,
         preemptions=sum(r.preempted for r in done),
         wasted_tokens=sum(r.wasted_tokens for r in done),
+        slo_attainment=(sum(1 for r in with_slo if r.slo_met) / len(with_slo)
+                        if with_slo else 1.0),
+        goodput_tok_s=sum(r.generated for r in met) / span,
+        goodput_req_s=len(met) / span,
     )
 
 
@@ -84,3 +96,14 @@ def summarize_by_class(requests: Sequence[Request],
     for r in requests:
         by_class.setdefault(r.priority_class, []).append(r)
     return {c: summarize(rs, horizon) for c, rs in sorted(by_class.items())}
+
+
+def summarize_by_tenant(requests: Sequence[Request],
+                        horizon: Optional[float] = None
+                        ) -> Dict[str, LatencyReport]:
+    """Per-tenant TTFT/TPOT/SLO-goodput breakdown (multi-tenant evaluation):
+    one LatencyReport per ``Request.tenant`` present in `requests`."""
+    by_tenant: Dict[str, List[Request]] = {}
+    for r in requests:
+        by_tenant.setdefault(r.tenant, []).append(r)
+    return {t: summarize(rs, horizon) for t, rs in sorted(by_tenant.items())}

@@ -34,8 +34,9 @@ from repro.core.scheduler import SchedulerCore
 from repro.core.sjf import SJFQueue
 from repro.core.types import EngineMetrics, GimbalConfig, Request
 from repro.models.config import ModelConfig
+from repro.core.slo import SLOTracker
 from repro.serving.metrics import (LatencyReport, MetricsBus, summarize,
-                                   summarize_by_class)
+                                   summarize_by_class, summarize_by_tenant)
 from repro.sim.backend import CostModelBackend
 from repro.sim.costmodel import CostModel, HardwareProfile, PROFILES
 
@@ -96,6 +97,11 @@ class SimResult:
     report_by_class: Dict[str, LatencyReport] = dataclasses.field(
         default_factory=dict)
     preemptions: int = 0
+    report_by_tenant: Dict[str, LatencyReport] = dataclasses.field(
+        default_factory=dict)
+    # per-(tenant, class) SLO counters merged across engine cores
+    # (core/slo.py::SLOTracker.snapshot format)
+    slo: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -154,10 +160,15 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
 
     hits = sum(e.prefix.hit_blocks for e in engines)
     probed = sum(e.prefix.probed_blocks for e in engines)
+    slo = SLOTracker()
+    for e in engines:
+        slo.merge(e.core.slo)
     return SimResult(
         report=summarize(finished, horizon),
         prefix_hits=hits, prefix_probed=probed,
         moe_mult_final=experts.moe_mult, cross_frac_final=experts.cross_frac,
         migrations=experts.migrations, per_engine_steps=steps,
         report_by_class=summarize_by_class(finished, horizon),
-        preemptions=sum(e.preemptions for e in engines))
+        preemptions=sum(e.preemptions for e in engines),
+        report_by_tenant=summarize_by_tenant(finished, horizon),
+        slo=slo.snapshot())

@@ -13,6 +13,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.types import Request
+from repro.workloads.arrivals import mmpp_gaps
 
 DISTRIBUTIONS = ("random", "central", "descending", "two-end", "average")
 
@@ -60,7 +61,8 @@ def burstgpt_trace(n: int = 1000, distribution: str = "random", rps: float = 1.4
                    seed: int = 0, with_users: bool = False,
                    vocab_size: Optional[int] = None,
                    burstiness: float = 2.5,
-                   interactive_frac: float = 0.0) -> List[Request]:
+                   interactive_frac: float = 0.0,
+                   arrival: str = "mmpp") -> List[Request]:
     """Arrivals at mean `rps` with BurstGPT-like burstiness (the dataset's
     namesake): a two-state MMPP alternating burst/calm phases whose
     inter-arrival CV ~= `burstiness` (CV=1 == Poisson; the paper's queueing
@@ -70,26 +72,24 @@ def burstgpt_trace(n: int = 1000, distribution: str = "random", rps: float = 1.4
     `interactive_frac` > 0 tags that fraction of requests with
     priority_class="interactive" (rest "batch") for mixed-tenant /
     preemption experiments; the draw is independent of size and arrival so
-    both classes see the same length distribution."""
+    both classes see the same length distribution.
+
+    `arrival` swaps the arrival process for any registered in
+    workloads/arrivals.py ("poisson"/"gamma"/"diurnal"/"flash"); the default
+    "mmpp" keeps the original generator — and the exact RNG call sequence,
+    so every pre-existing seeded trace stays bit-identical.  Non-mmpp
+    arrivals draw from a spawned child generator (which does not advance the
+    main bitstream), so at a fixed seed every non-mmpp arrival process sees
+    the SAME prompt/output lengths — cross-arrival comparisons measure
+    clumping, not a resampled workload."""
     rng = np.random.default_rng(seed)
-    if burstiness <= 1.0:
-        gaps = rng.exponential(1.0 / rps, n)
+    if arrival == "mmpp":
+        # shared two-state MMPP (workloads/arrivals.py) — same RNG call
+        # sequence as the original inline generator
+        arrivals = np.cumsum(mmpp_gaps(rng, n, rps, burstiness))
     else:
-        # burst phase: rate_hi = b * rps ; calm phase: rate_lo = rps / b
-        b = burstiness
-        hi, lo = b * rps, rps / b
-        # dwell ~ 20 requests per phase on average, weighted to keep mean rps
-        gaps = np.empty(n)
-        i = 0
-        state_hi = bool(rng.integers(0, 2))
-        while i < n:
-            dwell = max(1, int(rng.exponential(20)))
-            rate = hi if state_hi else lo
-            j = min(n, i + dwell)
-            gaps[i:j] = rng.exponential(1.0 / rate, j - i)
-            i = j
-            state_hi = not state_hi
-    arrivals = np.cumsum(gaps)
+        from repro.workloads.arrivals import make_arrivals
+        arrivals = make_arrivals(arrival, rng.spawn(1)[0], n, rps)
     plens = _sample_prompt_lens(rng, n, distribution)
     olens = _sample_output_lens(rng, n)
     # guard the draw so interactive_frac=0 leaves the seeded stream (and thus

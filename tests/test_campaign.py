@@ -1,0 +1,103 @@
+"""Campaign runner contract: matrix shape, resumability, report generation.
+
+Uses tiny custom matrices (a few 30-request cells) with tmp_path-scoped
+caches so the suite stays fast and never touches the checked-in artifacts."""
+import dataclasses
+import json
+
+import pytest
+
+from benchmarks import campaign as C
+
+
+def tiny_matrix(**overrides):
+    base = dict(name="test", variants=("vllm", "gimbal_p"),
+                workloads=("mix:chat_vs_batch",), arrivals=("poisson",),
+                rps=(10.0,), seeds=(0,), n_requests=30)
+    base.update(overrides)
+    return C.Matrix(**base)
+
+
+def run(matrix, tmp_path, cache=None, **kw):
+    cache = cache or C.CampaignCache(path=tmp_path / "cache.json")
+    rows = C.run_campaign(matrix, jobs=1,
+                          out_json=tmp_path / "BENCH_campaign.json",
+                          out_md=tmp_path / "results.md",
+                          cache=cache, verbose=False, **kw)
+    return rows, cache
+
+
+def test_matrix_cells_are_the_cross_product():
+    m = tiny_matrix(rps=(8.0, 10.0), seeds=(0, 1, 2))
+    cells = m.cells()
+    assert len(cells) == 2 * 1 * 1 * 2 * 3
+    assert len({C.cell_key(c) for c in cells}) == len(cells)
+    # the acceptance matrix really covers >= 100 cells
+    assert len(C.MATRICES["quick"].cells()) >= 100
+
+
+def test_campaign_rows_and_artifacts(tmp_path):
+    rows, _ = run(tiny_matrix(), tmp_path)
+    assert len(rows) == 2
+    for row in rows:
+        assert {"mean_ttft", "p99_ttft", "mean_tpot", "slo_attainment",
+                "goodput_tok_s", "by_class", "by_tenant",
+                "slo_cells"} <= set(row)
+        assert set(row["by_tenant"]) == {"chat", "summarize"}
+        assert 0.0 <= row["slo_attainment"] <= 1.0
+    art = json.loads((tmp_path / "BENCH_campaign.json").read_text())
+    assert art["schema"] == C.CAMPAIGN_SCHEMA
+    assert len(art["rows"]) == 2
+    md = (tmp_path / "results.md").read_text()
+    assert "AUTO-GENERATED" in md
+    assert "attain:interactive" in md and "goodput" in md
+    assert "| vllm |" in md and "| gimbal_p |" in md
+
+
+def test_campaign_resumes_from_cache(tmp_path, monkeypatch):
+    """After an interruption, completed cells are never re-simulated: a
+    second run over a superset matrix only executes the missing cells."""
+    small = tiny_matrix()
+    rows1, cache = run(small, tmp_path)
+    # superset matrix: one more seed => 2 new cells, 2 cached
+    big = dataclasses.replace(small, seeds=(0, 1))
+    executed = []
+    real = C.run_cell
+    monkeypatch.setattr(C, "run_cell", lambda c: executed.append(
+        C.cell_key(c)) or real(c))
+    rows2, _ = run(big, tmp_path, cache=cache)
+    assert len(rows2) == 4
+    assert len(executed) == 2                      # only the new cells ran
+    assert all("|1|" in k for k in executed)       # … the seed-1 ones
+    # cached rows are reused object-for-object equal
+    k0 = C.cell_key(small.cells()[0])
+    assert cache.rows[k0] == rows1[0]
+
+    # a fully-cached re-run executes nothing and still regenerates artifacts
+    executed.clear()
+    (tmp_path / "results.md").unlink()
+    rows3, _ = run(big, tmp_path, cache=cache)
+    assert executed == [] and len(rows3) == 4
+    assert (tmp_path / "results.md").exists()
+
+
+def test_cache_survives_partial_flush_and_schema_bump(tmp_path, monkeypatch):
+    path = tmp_path / "cache.json"
+    cache = C.CampaignCache(path=path, flush_every=1)
+    cache.put("k", {"x": 1})
+    assert C.CampaignCache(path=path).rows == {"k": {"x": 1}}
+    # schema bump discards stale results instead of silently reporting them
+    monkeypatch.setattr(C, "CAMPAIGN_SCHEMA", C.CAMPAIGN_SCHEMA + 1)
+    assert C.CampaignCache(path=path).rows == {}
+    # a truncated file (killed mid-write of a non-atomic writer) is tolerated
+    path.write_text('{"_schema":')
+    assert C.CampaignCache(path=path).rows == {}
+
+
+def test_build_trace_axes():
+    mix = C.build_trace("mix:three_tier", "flash", 8.0, 0, 50)
+    assert {r.tenant for r in mix} <= {"enterprise", "pro", "free"}
+    bg = C.build_trace("bgpt:central", "poisson", 8.0, 0, 50)
+    assert all(r.tenant == "default" and not r.has_slo for r in bg)
+    with pytest.raises(ValueError):
+        C.build_trace("nope:x", "poisson", 8.0, 0, 10)

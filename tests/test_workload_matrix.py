@@ -1,0 +1,227 @@
+"""Scenario-matrix workloads: arrival processes, tenant mixer, SLO accounting.
+
+Covers the new generators' contract surface: seed determinism, distribution-
+shape invariants (property-tested), tenant-mix label conservation, and the
+SLO-goodput summary columns (core/slo.py + serving/metrics.py)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.slo import SLOTracker
+from repro.core.types import Request
+from repro.serving.metrics import summarize, summarize_by_tenant
+from repro.workloads import (ARRIVAL_PROCESSES, SUITES, TenantSpec,
+                             burstgpt_trace, make_arrivals, mixed_trace,
+                             suite_trace)
+
+
+# --- arrival processes ------------------------------------------------------
+
+@pytest.mark.parametrize("process", sorted(ARRIVAL_PROCESSES))
+def test_arrivals_sorted_positive_and_deterministic(process):
+    a = make_arrivals(process, np.random.default_rng(7), 500, 4.0)
+    b = make_arrivals(process, np.random.default_rng(7), 500, 4.0)
+    c = make_arrivals(process, np.random.default_rng(8), 500, 4.0)
+    assert a.shape == (500,)
+    assert (np.diff(a) >= 0).all() and (a > 0).all()
+    assert np.array_equal(a, b)                  # same seed, same stream
+    assert not np.array_equal(a, c)              # different seed differs
+
+
+@pytest.mark.parametrize("process", sorted(ARRIVAL_PROCESSES))
+def test_arrivals_hit_target_mean_rate(process):
+    a = make_arrivals(process, np.random.default_rng(0), 4000, 5.0)
+    rate = (len(a) - 1) / (a[-1] - a[0])
+    assert 3.0 < rate < 7.5, f"{process} mean rate {rate:.2f} far from 5.0"
+
+
+@settings(max_examples=20)
+@given(st.floats(min_value=1.5, max_value=5.0),
+       st.integers(min_value=0, max_value=10_000))
+def test_bursty_processes_have_higher_cv_than_poisson(burst, seed):
+    """Shape invariant: MMPP at burstiness b and gamma at cv b must both be
+    burstier (inter-arrival CV) than Poisson from the same seed."""
+    def cv(process, **kw):
+        a = make_arrivals(process, np.random.default_rng(seed), 3000, 3.0, **kw)
+        gaps = np.diff(a)
+        return gaps.std() / gaps.mean()
+    base = cv("poisson")
+    assert cv("mmpp", burstiness=burst) > base
+    assert cv("gamma", cv=burst) > base
+
+
+def test_gamma_cv_below_one_is_smoother_than_poisson():
+    def cv(process, **kw):
+        a = make_arrivals(process, np.random.default_rng(3), 3000, 3.0, **kw)
+        g = np.diff(a)
+        return g.std() / g.mean()
+    assert cv("gamma", cv=0.3) < 0.6 * cv("poisson")
+
+
+def test_diurnal_rate_oscillates():
+    """The instantaneous rate must actually swing: splitting the trace into
+    period-quarters, the busiest quarter sees far more arrivals than the
+    quietest."""
+    a = make_arrivals("diurnal", np.random.default_rng(1), 4000, 5.0,
+                      depth=0.8, cycles=2.0)
+    counts, _ = np.histogram(a, bins=16)
+    assert counts.max() > 2 * max(counts.min(), 1)
+
+
+def test_flash_crowd_has_spike_windows():
+    """Some short window must run at several times the base rate."""
+    a = make_arrivals("flash", np.random.default_rng(2), 2000, 4.0,
+                      spike_mult=8.0)
+    counts, edges = np.histogram(a, bins=int(a[-1]))   # ~1-second bins
+    assert counts.max() > 3 * 4.0                      # >3x the mean rate
+
+
+def test_burstgpt_arrival_axis():
+    """burstgpt_trace(arrival=...) swaps the process; default stays MMPP and
+    bit-identical to the historical stream."""
+    mmpp = burstgpt_trace(n=100, rps=5.0, seed=4)
+    again = burstgpt_trace(n=100, rps=5.0, seed=4, arrival="mmpp")
+    assert [r.arrival_time for r in mmpp] == [r.arrival_time for r in again]
+    poisson = burstgpt_trace(n=100, rps=5.0, seed=4, arrival="poisson")
+    assert [r.arrival_time for r in poisson] != [r.arrival_time for r in mmpp]
+    # non-arrival fields keep their generators
+    assert all(16 <= r.prompt_len <= 6000 for r in poisson)
+    with pytest.raises(ValueError):
+        burstgpt_trace(n=10, arrival="nope")
+
+
+# --- tenant mixer -----------------------------------------------------------
+
+def test_mixed_trace_label_conservation():
+    specs = SUITES["three_tier"]
+    trace = mixed_trace(specs, n=1500, arrival="poisson", rps=8.0, seed=0)
+    by_name = {s.name: s for s in specs}
+    counts = {s.name: 0 for s in specs}
+    for r in trace:
+        s = by_name[r.tenant]                    # every label is a spec name
+        counts[r.tenant] += 1
+        assert r.priority_class == s.priority_class
+        assert r.slo_ttft == s.slo_ttft and r.slo_tpot == s.slo_tpot
+        assert r.user_id.startswith(f"{s.name}:user")   # sticky pool, no leak
+    assert sum(counts.values()) == 1500
+    w = sum(s.weight for s in specs)
+    for s in specs:                              # volume shares ~ weights
+        assert abs(counts[s.name] / 1500 - s.weight / w) < 0.07
+
+
+def test_arrival_axis_keeps_workload_paired():
+    """Switching the arrival process at a fixed seed must NOT resample the
+    workload: tenant labels, lengths and users stay identical (cross-arrival
+    campaign cells compare clumping, not different traffic).  Same for
+    burstgpt across its non-mmpp processes."""
+    shape = lambda t: [(r.tenant, r.prompt_len, r.max_new_tokens, r.user_id)
+                       for r in t]
+    specs = SUITES["three_tier"]
+    ref = mixed_trace(specs, n=150, arrival="poisson", rps=6.0, seed=2)
+    for arr in ("mmpp", "gamma", "diurnal", "flash"):
+        t = mixed_trace(specs, n=150, arrival=arr, rps=6.0, seed=2)
+        assert shape(t) == shape(ref), arr
+        assert [r.arrival_time for r in t] != [r.arrival_time for r in ref]
+    bref = burstgpt_trace(n=150, rps=6.0, seed=2, arrival="poisson")
+    for arr in ("gamma", "diurnal", "flash"):
+        bt = burstgpt_trace(n=150, rps=6.0, seed=2, arrival=arr)
+        assert [(r.prompt_len, r.max_new_tokens) for r in bt] == \
+               [(r.prompt_len, r.max_new_tokens) for r in bref], arr
+
+
+def test_mixed_trace_deterministic_and_seed_sensitive():
+    specs = SUITES["chat_vs_batch"]
+    key = lambda t: [(r.tenant, r.prompt_len, r.max_new_tokens,
+                      r.arrival_time, r.user_id) for r in t]
+    a = mixed_trace(specs, n=200, seed=5)
+    assert key(a) == key(mixed_trace(specs, n=200, seed=5))
+    assert key(a) != key(mixed_trace(specs, n=200, seed=6))
+
+
+def test_mixed_trace_per_tenant_shapes_differ():
+    """Each tenant keeps its own prompt-length distribution: bimodal two-end
+    traffic is wider-spread than bell-shaped central traffic, and the
+    short-heavy descending tenant has a much lower median than two-end."""
+    specs = (TenantSpec("narrow", weight=1.0, prompt_dist="central"),
+             TenantSpec("wide", weight=1.0, prompt_dist="two-end"),
+             TenantSpec("short", weight=1.0, prompt_dist="descending"))
+    trace = mixed_trace(specs, n=4500, seed=1)
+    by = {s.name: [r.prompt_len for r in trace if r.tenant == s.name]
+          for s in specs}
+    assert np.std(by["wide"]) > 1.5 * np.std(by["narrow"])
+    # short-heavy exponential decay vs the mid-range bell: median far lower
+    # (two-end's median is bimodal-unstable, so compare against central)
+    assert np.median(by["short"]) < 0.6 * np.median(by["narrow"])
+
+
+def test_suite_trace_unknown_names():
+    with pytest.raises(ValueError):
+        suite_trace("no-such-suite")
+    with pytest.raises(ValueError):
+        mixed_trace(())
+
+
+# --- SLO accounting ---------------------------------------------------------
+
+def _finished(req_id, tenant, cls, ttft, tpot_total, gen, slo_ttft, slo_tpot,
+              arrival=0.0):
+    r = Request(req_id=req_id, prompt_len=8, max_new_tokens=gen,
+                arrival_time=arrival, priority_class=cls, tenant=tenant,
+                slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+    r.first_token_time = arrival + ttft
+    r.finish_time = r.first_token_time + tpot_total
+    r.generated = gen
+    return r
+
+
+def test_slo_met_semantics():
+    ok = _finished(0, "t", "batch", ttft=0.5, tpot_total=0.9, gen=10,
+                   slo_ttft=1.0, slo_tpot=0.2)
+    assert ok.slo_met is True
+    late = _finished(1, "t", "batch", ttft=2.0, tpot_total=0.9, gen=10,
+                     slo_ttft=1.0, slo_tpot=0.2)
+    assert late.slo_met is False
+    slow = _finished(2, "t", "batch", ttft=0.5, tpot_total=9.0, gen=10,
+                     slo_ttft=1.0, slo_tpot=0.2)
+    assert slow.slo_met is False
+    none = _finished(3, "t", "batch", ttft=9.0, tpot_total=9.0, gen=10,
+                     slo_ttft=None, slo_tpot=None)
+    assert not none.has_slo and none.slo_met is True   # vacuous
+    unfinished = Request(req_id=4, prompt_len=8, max_new_tokens=4,
+                         arrival_time=0.0, slo_ttft=1.0)
+    assert unfinished.slo_met is None
+
+
+def test_slo_tracker_cells_and_merge():
+    a, b = SLOTracker(), SLOTracker()
+    a.observe(_finished(0, "chat", "interactive", 0.1, 0.5, 10, 1.0, 0.2))
+    a.observe(_finished(1, "chat", "interactive", 5.0, 0.5, 10, 1.0, 0.2))
+    b.observe(_finished(2, "bulk", "batch", 9.0, 9.0, 20, None, None))
+    snap = a.merge(b).snapshot()
+    chat = snap["chat/interactive"]
+    assert (chat["finished"], chat["met"], chat["with_slo"]) == (2, 1, 2)
+    assert chat["attainment"] == 0.5
+    assert (chat["tokens"], chat["good_tokens"]) == (20, 10)
+    bulk = snap["bulk/batch"]
+    assert bulk["attainment"] == 1.0                   # SLO-less slice
+    assert bulk["good_tokens"] == bulk["tokens"] == 20
+
+
+def test_summarize_goodput_columns():
+    reqs = [
+        _finished(0, "chat", "interactive", 0.1, 0.5, 10, 1.0, 0.2),
+        _finished(1, "chat", "interactive", 5.0, 0.5, 10, 1.0, 0.2,
+                  arrival=1.0),
+        _finished(2, "bulk", "batch", 4.0, 4.0, 30, None, None, arrival=2.0),
+    ]
+    rep = summarize(reqs)
+    assert rep.slo_attainment == 0.5                  # 1 of 2 graded met
+    assert rep.goodput_req_s < rep.throughput_req_s   # the miss drops out
+    # met set = req 0 (10 tok) + vacuous req 2 (30 tok)
+    assert rep.goodput_tok_s == pytest.approx(rep.throughput_tok_s * 40 / 50)
+    by_t = summarize_by_tenant(reqs)
+    assert set(by_t) == {"bulk", "chat"}
+    assert by_t["bulk"].slo_attainment == 1.0
+    assert by_t["bulk"].goodput_tok_s == by_t["bulk"].throughput_tok_s
+    assert by_t["chat"].slo_attainment == 0.5

@@ -1,0 +1,71 @@
+"""Docs reference checker: code paths and links in docs/*.md can't rot.
+
+``python tools/check_docs.py``  — exit 1 listing every broken reference.
+
+Checks, across README.md and docs/*.md:
+
+  * markdown links ``[text](target)`` whose target is a relative path must
+    point at an existing file (anchors and http(s) links are skipped);
+  * inline-code path references like ``src/repro/core/scheduler.py`` or
+    ``tests/test_x.py::test_y`` (the ``::symbol`` suffix is stripped) must
+    exist on disk.
+
+Generated artifact paths (``benchmarks/artifacts/…``, ``checkpoints/…``)
+are exempt — they exist only after a run and are gitignored.  CI runs this
+next to ``tools/gen_api_docs.py --check``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+# inline-code path refs: `dir/file.ext` optionally followed by ::symbol
+PATH_RE = re.compile(
+    r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+\.[A-Za-z0-9]{1,5})"
+    r"(?:::[A-Za-z0-9_.]+)?`")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+
+GENERATED_PREFIXES = ("benchmarks/artifacts/", "checkpoints/")
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    refs = set()
+    for m in PATH_RE.finditer(text):
+        refs.add(m.group(1))
+    for m in LINK_RE.finditer(text):
+        tgt = m.group(1)
+        if tgt.startswith(("http://", "https://", "mailto:")):
+            continue
+        refs.add(tgt)
+    for ref in sorted(refs):
+        if ref.startswith(GENERATED_PREFIXES):
+            continue
+        # resolve relative to the doc's directory, the repo root, or
+        # src/repro/ (docs prose shortens `src/repro/core/sjf.py` to
+        # `core/sjf.py`)
+        if not ((md.parent / ref).exists() or (REPO / ref).exists()
+                or (REPO / "src" / "repro" / ref).exists()):
+            errors.append(f"{md.relative_to(REPO)}: broken reference {ref!r}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for md in DOC_FILES:
+        errors += check_file(md)
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"{len(errors)} broken doc reference(s)", file=sys.stderr)
+        return 1
+    print(f"docs OK: {len(DOC_FILES)} files, all path references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
