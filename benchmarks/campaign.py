@@ -45,14 +45,27 @@ DOCS = Path(__file__).resolve().parent.parent / "docs"
 # Bump whenever cell semantics change (simulator, workloads, SLO accounting):
 # a stale cache would silently report pre-change numbers.  1 = first campaign
 # (SchedulerCore schema 2 + SLO-goodput accounting); 2 = arrival draws moved
-# to a spawned generator so lengths are paired across the arrival axis.
-CAMPAIGN_SCHEMA = 2
+# to a spawned generator so lengths are paired across the arrival axis;
+# 3 = expert_skew axis + replicated expert level (eplb / gimbal+rep variants,
+# hotspot-multiplier trajectory).
+CAMPAIGN_SCHEMA = 3
 
 MODEL = "qwen3-30b-a3b"
 N_ENGINES = 2
 KV_POOL = 60_000
 MMPP_BURSTINESS = 4.0           # benchmarks/common.py calibration
-CAMPAIGN_VARIANTS = ("vllm", "dplb", "sjfs", "edr", "gimbal", "gimbal_p")
+CAMPAIGN_VARIANTS = ("vllm", "dplb", "sjfs", "edr", "eplb", "gimbal",
+                     "gimbal+rep", "gimbal_p")
+# expert_skew axis: how hot the synthetic expert prior's hot experts run
+# ("base" = the paper's Fig. 3 shape; "hot" stresses replication) and the
+# replica-slot count the "gimbal+rep" variant deploys (E=128 + 16 replicas)
+EXPERT_SKEW = {"base": 8.0, "hot": 32.0}
+REP_REDUNDANCY = 16
+# EDR period for every campaign cell: the paper's tau=3000 is sized for
+# hour-long production traces; our 200-400-request cells run a few thousand
+# aggregate engine steps, so a shorter period lets the expert level fire
+# several times per cell (the hotspot-multiplier trajectory needs >1 point)
+TAU = 400
 # the cost-model operating points (benchmarks/common.py maps these onto the
 # paper's 1.0/1.2/1.4 RPS at equal utilization)
 RPS_GRID = (7.14, 8.57, 10.0)
@@ -69,20 +82,22 @@ class Matrix:
     rps: Tuple[float, ...]
     seeds: Tuple[int, ...]
     n_requests: int = 400
+    expert_skew: Tuple[str, ...] = ("base",)    # EXPERT_SKEW keys
 
     def cells(self) -> List[Dict]:
         out = []
-        for v, w, a, r, s in itertools.product(
+        for v, w, a, r, s, x in itertools.product(
                 self.variants, self.workloads, self.arrivals, self.rps,
-                self.seeds):
+                self.seeds, self.expert_skew):
             out.append({"variant": v, "workload": w, "arrival": a,
-                        "rps": r, "seed": s, "n": self.n_requests})
+                        "rps": r, "seed": s, "n": self.n_requests,
+                        "expert_skew": x})
         return out
 
 
 def cell_key(c: Dict) -> str:
     return (f"{c['variant']}|{c['workload']}|{c['arrival']}|{c['rps']}"
-            f"|{c['seed']}|{c['n']}|{MODEL}")
+            f"|{c['seed']}|{c['n']}|{c.get('expert_skew', 'base')}|{MODEL}")
 
 
 MATRICES: Dict[str, Matrix] = {
@@ -98,29 +113,36 @@ MATRICES: Dict[str, Matrix] = {
         rps=RPS_GRID,
         seeds=(0, 1, 2),
         n_requests=400),
-    # ≥100 cells in minutes on CPU: the acceptance-criterion matrix
+    # ≥100 cells in minutes on CPU: the acceptance-criterion matrix.  The
+    # expert_skew axis pairs every cell with a hot-expert-skewed twin, so the
+    # gimbal-vs-gimbal+rep hotspot-multiplier comparison lands in the
+    # headline BENCH_campaign.json
     "quick": Matrix(
         name="quick",
-        variants=("vllm", "sjfs", "gimbal", "gimbal_p"),
+        variants=("vllm", "sjfs", "eplb", "gimbal", "gimbal+rep", "gimbal_p"),
         workloads=("mix:chat_vs_batch", "mix:three_tier", "bgpt:random"),
         arrivals=("poisson", "mmpp", "flash"),
         rps=(8.57, 10.0),
         seeds=(0, 1),
-        n_requests=200),
+        n_requests=200,
+        expert_skew=("base", "hot")),
     # CI-sized: exercises every moving part (mix + bgpt workloads, two
     # arrival processes, preemptive variant, resume path) in seconds
     "smoke": Matrix(
         name="smoke",
-        variants=("vllm", "gimbal_p"),
+        variants=("vllm", "gimbal_p", "gimbal+rep"),
         workloads=("mix:chat_vs_batch", "bgpt:random"),
         arrivals=("mmpp", "flash"),
         rps=(10.0,),
         seeds=(0,),
-        n_requests=60),
+        n_requests=60,
+        expert_skew=("hot",)),
     # the paper's §V-A.7 ablation table (benchmarks/run.py delegates here)
+    # plus the repo's expert-level baselines (count-only EPLB, replication)
     "ablation": Matrix(
         name="ablation",
-        variants=("vllm", "dplb", "sjfs", "edr", "gimbal"),
+        variants=("vllm", "dplb", "sjfs", "edr", "eplb", "gimbal",
+                  "gimbal+rep"),
         workloads=("bgpt:random",),
         arrivals=("mmpp",),
         rps=RPS_GRID,
@@ -161,19 +183,25 @@ def run_cell(cell: Dict) -> Dict:
     from repro.sim.simulator import simulate
 
     variant = cell["variant"]
-    gcfg = None
+    gcfg = GimbalConfig(tau=TAU)
     if variant == "gimbal_p":
-        variant, gcfg = "gimbal", GimbalConfig(enable_preemption=True)
+        variant, gcfg = "gimbal", GimbalConfig(tau=TAU, enable_preemption=True)
+    elif variant == "gimbal+rep":
+        gcfg = GimbalConfig(tau=TAU, redundancy=REP_REDUNDANCY)
     trace = build_trace(cell["workload"], cell["arrival"], cell["rps"],
                         cell["seed"], cell["n"])
     t0 = time.time()
     res = simulate(trace, variant, get_config(MODEL), n_engines=N_ENGINES,
                    hw="a100", gcfg=gcfg, kv_pool_tokens=KV_POOL,
-                   seed=cell["seed"])
+                   seed=cell["seed"],
+                   hot_boost=EXPERT_SKEW[cell.get("expert_skew", "base")])
     row = dict(cell)
     row.update(_report_cols(res.report))
     row["preemptions"] = res.preemptions
     row["migrations"] = res.migrations
+    row["moe_mult"] = res.moe_mult_final
+    row["cross_frac"] = res.cross_frac_final
+    row["moe_mult_trajectory"] = [[s, m] for s, m in res.moe_mult_trajectory]
     row["by_class"] = {c: _report_cols(rep)
                        for c, rep in res.report_by_class.items()}
     row["by_tenant"] = {t: _report_cols(rep)
@@ -251,7 +279,8 @@ def render_report(rows: List[Dict], matrix: Matrix) -> str:
         f"Matrix `{matrix.name}`: {len(rows)} cells = "
         f"{len(matrix.variants)} variants × {len(matrix.workloads)} workloads"
         f" × {len(matrix.arrivals)} arrivals × {len(matrix.rps)} rates × "
-        f"{len(matrix.seeds)} seeds (n={matrix.n_requests} requests/cell, "
+        f"{len(matrix.seeds)} seeds × {len(matrix.expert_skew)} expert-skew "
+        f"levels (n={matrix.n_requests} requests/cell, "
         f"model `{MODEL}`, {N_ENGINES} engines, {KV_POOL} KV tokens).",
         "",
         "Latencies in simulator seconds; **goodput** counts only tokens from"
@@ -271,32 +300,35 @@ def render_report(rows: List[Dict], matrix: Matrix) -> str:
                 continue
             lines.append(f"### Arrival process `{a}`")
             lines.append("")
-            hdr = (["variant", "rps", "mean TTFT", "p99 TTFT", "mean TPOT",
-                    "goodput tok/s", "SLO attain"]
+            hdr = (["variant", "skew", "rps", "mean TTFT", "p99 TTFT",
+                    "mean TPOT", "goodput tok/s", "SLO attain", "moe mult"]
                    + [f"attain:{c}" for c in classes])
             lines.append("| " + " | ".join(hdr) + " |")
             lines.append("|" + "---|" * len(hdr))
             for v in matrix.variants:
-                for rps in matrix.rps:
-                    sel = [r for r in cell_rows
-                           if r["variant"] == v and r["rps"] == rps]
-                    if not sel:
-                        continue
-                    per_class = []
-                    for c in classes:
-                        if any(c in r["by_class"] for r in sel):
-                            per_class.append(_fmt(_mean_over_seeds(
-                                sel, "slo_attainment", "by_class", c)))
-                        else:
-                            per_class.append("—")
-                    lines.append("| " + " | ".join(
-                        [v, _fmt(rps),
-                         _fmt(_mean_over_seeds(sel, "mean_ttft")),
-                         _fmt(_mean_over_seeds(sel, "p99_ttft")),
-                         _fmt(_mean_over_seeds(sel, "mean_tpot")),
-                         _fmt(_mean_over_seeds(sel, "goodput_tok_s")),
-                         _fmt(_mean_over_seeds(sel, "slo_attainment"))]
-                        + per_class) + " |")
+                for skew in matrix.expert_skew:
+                    for rps in matrix.rps:
+                        sel = [r for r in cell_rows
+                               if r["variant"] == v and r["rps"] == rps
+                               and r.get("expert_skew", "base") == skew]
+                        if not sel:
+                            continue
+                        per_class = []
+                        for c in classes:
+                            if any(c in r["by_class"] for r in sel):
+                                per_class.append(_fmt(_mean_over_seeds(
+                                    sel, "slo_attainment", "by_class", c)))
+                            else:
+                                per_class.append("—")
+                        lines.append("| " + " | ".join(
+                            [v, skew, _fmt(rps),
+                             _fmt(_mean_over_seeds(sel, "mean_ttft")),
+                             _fmt(_mean_over_seeds(sel, "p99_ttft")),
+                             _fmt(_mean_over_seeds(sel, "mean_tpot")),
+                             _fmt(_mean_over_seeds(sel, "goodput_tok_s")),
+                             _fmt(_mean_over_seeds(sel, "slo_attainment")),
+                             _fmt(_mean_over_seeds(sel, "moe_mult"))]
+                            + per_class) + " |")
             lines.append("")
     return "\n".join(lines) + "\n"
 

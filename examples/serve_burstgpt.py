@@ -20,13 +20,18 @@ from repro.workloads.burstgpt import burstgpt_trace
 def build_cluster(variant: str, n_engines: int = 2) -> Cluster:
     cfg = get_smoke_config("qwen3-30b-a3b").replace(num_experts=16)
     gcfg = GimbalConfig(tau=20, theta_load=64)
+    # ONE cluster-wide expert level (§V-A.1): every engine observes routed
+    # stats into the same tracker and applies the same placements
+    from repro.core.gimbal import make_cluster_expert_level
+    level = make_cluster_expert_level(variant, cfg, n_engines, gcfg)
     engines = []
     for i in range(n_engines):
         params = M.init_params(jax.random.key(i), cfg)
         engines.append(Engine(i, cfg, params, variant=variant, gimbal_cfg=gcfg,
                               max_slots=4, max_seq=128, prefill_budget=128,
-                              num_expert_devices=4))
-    return Cluster(engines, variant=variant, gimbal_cfg=gcfg)
+                              expert_level=level))
+    return Cluster(engines, variant=variant, gimbal_cfg=gcfg,
+                   expert_level=level)
 
 
 def main():
@@ -49,9 +54,11 @@ def main():
         c.run_until_drained(t0=trace[-1].arrival_time + 0.01, dt=0.05)
         rep = c.report()
         relocs = sum(e.relocations for e in c.engines.values())
+        xrep = c.expert_report()
         print(f"{variant:7s}: {rep.n} done | mean TTFT {rep.mean_ttft:.3f}s "
               f"p99 {rep.p99_ttft:.3f}s | TPOT {rep.mean_tpot*1e3:.1f}ms | "
-              f"{rep.throughput_tok_s:.0f} tok/s | expert relocations {relocs}")
+              f"{rep.throughput_tok_s:.0f} tok/s | expert relocations {relocs}"
+              f" | moe_mult {xrep['moe_mult']:.3f}")
 
 
 if __name__ == "__main__":

@@ -6,10 +6,15 @@ from repro.core.preempt import (VICTIM_POLICIES, eligible_victims,
                                 reset_for_resume, select_victim)
 from repro.core.affinity import AffinityTracker, accumulate_stats, synthetic_stats
 from repro.core.placement import (assignment_to_perm, comm_cut, eplb_placement,
-                                  gimbal_placement, migration_cost, milp_exact,
-                                  objective, perm_to_assignment, row_imbalance,
+                                  eplb_placement_rep, gimbal_placement,
+                                  gimbal_placement_rep, migration_cost,
+                                  milp_exact, objective, perm_to_assignment,
+                                  perm_to_slot_map, placement_coupling,
+                                  rep_comm_cut, rep_migration_cost,
+                                  rep_row_imbalance, row_imbalance,
                                   static_placement)
-from repro.core.eplb import (ExpertRebalancer, NullExpertLevel, RebalanceEvent,
+from repro.core.eplb import (ClusterExpertLevel, ExpertRebalancer,
+                             NullExpertLevel, RebalanceEvent,
                              SyntheticExpertLevel)
 from repro.core.gimbal import (VARIANTS, make_queue, make_rebalancer,
                                make_router, make_sim_expert_level,
@@ -24,11 +29,13 @@ __all__ = [
     "SJFQueue", "fcfs_order", "sjf_order",
     "VICTIM_POLICIES", "eligible_victims", "reset_for_resume", "select_victim",
     "AffinityTracker", "accumulate_stats", "synthetic_stats",
-    "assignment_to_perm", "comm_cut", "eplb_placement", "gimbal_placement",
-    "migration_cost", "milp_exact", "objective", "perm_to_assignment",
-    "row_imbalance", "static_placement",
-    "ExpertRebalancer", "NullExpertLevel", "RebalanceEvent",
-    "SyntheticExpertLevel",
+    "assignment_to_perm", "comm_cut", "eplb_placement", "eplb_placement_rep",
+    "gimbal_placement", "gimbal_placement_rep", "migration_cost", "milp_exact",
+    "objective", "perm_to_assignment", "perm_to_slot_map",
+    "placement_coupling", "rep_comm_cut", "rep_migration_cost",
+    "rep_row_imbalance", "row_imbalance", "static_placement",
+    "ClusterExpertLevel", "ExpertRebalancer", "NullExpertLevel",
+    "RebalanceEvent", "SyntheticExpertLevel",
     "VARIANTS", "make_queue", "make_rebalancer", "make_router",
     "make_sim_expert_level", "variant_flags",
     "PrefixCache",

@@ -1,33 +1,40 @@
 """Gimbal facade: wires the three scheduling levels together and exposes the
-ablation variants used in the paper's evaluation (§V-A.7).
+ablation variants used in the paper's evaluation (§V-A.7) plus the repo's
+beyond-paper baselines.
 
-  * "vllm"   — RR router + FCFS queue + static experts   (baseline)
-  * "dplb"   — Alg.1 router only
-  * "sjfs"   — SJF queue only
-  * "edr"    — expert dynamic replacement only
-  * "gimbal" — all three
+  * "vllm"       — RR router + FCFS queue + static experts   (baseline)
+  * "dplb"       — Alg.1 router only
+  * "sjfs"       — SJF queue only
+  * "edr"        — expert dynamic replacement only
+  * "eplb"       — count-only EPLB expert level (DeepSeek-style baseline,
+                   RR router + FCFS queue)
+  * "gimbal"     — all three
+  * "gimbal+rep" — gimbal with hot-expert replication: R redundant expert
+                   slots (GimbalConfig.redundancy; default one per device)
+                   holding replicas of the hottest experts
 """
 from __future__ import annotations
 
 from typing import Dict, Optional, Sequence
 
-from repro.core.eplb import (ExpertRebalancer, NullExpertLevel,
-                             SyntheticExpertLevel)
+from repro.core.eplb import (ClusterExpertLevel, ExpertRebalancer,
+                             NullExpertLevel, SyntheticExpertLevel)
 from repro.core.router import GimbalRouter, RoundRobinRouter
 from repro.core.sjf import SJFQueue
 from repro.core.types import GimbalConfig
 from repro.models.config import ModelConfig
 
-VARIANTS = ("vllm", "dplb", "sjfs", "edr", "gimbal")
+VARIANTS = ("vllm", "dplb", "sjfs", "edr", "eplb", "gimbal", "gimbal+rep")
 
 
 def variant_flags(variant: str) -> Dict[str, bool]:
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
     return {
-        "dplb": variant in ("dplb", "gimbal"),
-        "sjf": variant in ("sjfs", "gimbal"),
-        "edr": variant in ("edr", "gimbal"),
+        "dplb": variant in ("dplb", "gimbal", "gimbal+rep"),
+        "sjf": variant in ("sjfs", "gimbal", "gimbal+rep"),
+        "edr": variant in ("edr", "eplb", "gimbal", "gimbal+rep"),
+        "rep": variant == "gimbal+rep",
     }
 
 
@@ -44,9 +51,21 @@ def make_queue(variant: str, cfg: Optional[GimbalConfig] = None) -> SJFQueue:
 
 
 def _expert_policy(variant: str) -> str:
-    if variant == "eplb":                 # extra baseline: count-only EPLB
+    if variant == "eplb":                 # count-only EPLB baseline
         return "eplb"
     return "gimbal" if variant_flags(variant)["edr"] else "static"
+
+
+def _redundancy(variant: str, model_cfg: ModelConfig, num_devices: int,
+                cfg: GimbalConfig) -> int:
+    """Replica-slot count for this variant: GimbalConfig.redundancy, or one
+    redundant slot per device (keeping E+R divisible by g) when unset."""
+    if not variant_flags(variant)["rep"]:
+        return 0
+    r = cfg.redundancy if cfg.redundancy is not None else num_devices
+    assert (model_cfg.num_experts + r) % num_devices == 0, \
+        f"{num_devices} devices must divide E+R={model_cfg.num_experts + r}"
+    return r
 
 
 def make_rebalancer(variant: str, model_cfg: ModelConfig, num_devices: int,
@@ -54,17 +73,45 @@ def make_rebalancer(variant: str, model_cfg: ModelConfig, num_devices: int,
                     ) -> Optional[ExpertRebalancer]:
     if not model_cfg.is_moe:
         return None  # expert level inapplicable (see DESIGN.md §Arch-applicability)
-    return ExpertRebalancer(model_cfg, num_devices, policy=_expert_policy(variant),
-                            anchor=anchor, cfg=cfg or GimbalConfig())
+    cfg = cfg or GimbalConfig()
+    return ExpertRebalancer(model_cfg, num_devices,
+                            policy=_expert_policy(variant), anchor=anchor,
+                            cfg=cfg,
+                            redundancy=_redundancy(variant, model_cfg,
+                                                   num_devices, cfg))
+
+
+def make_cluster_expert_level(variant: str, model_cfg: ModelConfig,
+                              num_devices: int,
+                              cfg: Optional[GimbalConfig] = None,
+                              anchor: int = 0, prior_seed: Optional[int] = None,
+                              hot_boost: float = 8.0):
+    """The ONE expert level shared by every engine core in a cluster
+    (§V-A.1: experts EP-shard across all engines' devices).  Serving passes
+    it to each Engine; the simulator seeds it with the synthetic prior via
+    ``prior_seed``.  Non-MoE archs get the NullExpertLevel."""
+    if not model_cfg.is_moe:
+        return NullExpertLevel()
+    cfg = cfg or GimbalConfig()
+    return ClusterExpertLevel(model_cfg, num_devices,
+                              policy=_expert_policy(variant), anchor=anchor,
+                              cfg=cfg,
+                              redundancy=_redundancy(variant, model_cfg,
+                                                     num_devices, cfg),
+                              prior_seed=prior_seed, hot_boost=hot_boost)
 
 
 def make_sim_expert_level(variant: str, model_cfg: ModelConfig, num_devices: int,
                           cfg: Optional[GimbalConfig] = None, anchor: int = 0,
-                          seed: int = 0):
-    """Simulator twin of make_rebalancer: same policy wiring, synthetic stats,
-    plus the cost model's (moe_mult, cross_frac) coupling factors."""
+                          seed: int = 0, hot_boost: float = 8.0):
+    """Simulator twin of make_cluster_expert_level: same policy wiring, the
+    synthetic Fig.3/4 statistics installed as the prior, plus the cost
+    model's (moe_mult, cross_frac) coupling factors."""
     if not model_cfg.is_moe:
         return NullExpertLevel()
+    cfg = cfg or GimbalConfig()
     return SyntheticExpertLevel(model_cfg, num_devices,
                                 policy=_expert_policy(variant), anchor=anchor,
-                                cfg=cfg or GimbalConfig(), seed=seed)
+                                cfg=cfg, seed=seed, hot_boost=hot_boost,
+                                redundancy=_redundancy(variant, model_cfg,
+                                                       num_devices, cfg))

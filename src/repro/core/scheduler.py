@@ -127,6 +127,7 @@ class SchedulerCore:
         self.kv_tokens = 0                     # == sum(ctx_tokens.values())
         self.steps = 0
         self.preemptions = 0
+        self.hedged_away = 0          # requests the cluster hedged off this queue
         self.healthy = True
         self.events: List[SchedEvent] = []
         # SLO-attainment / goodput accounting per (tenant, class) — the same
@@ -154,6 +155,7 @@ class SchedulerCore:
             num_waiting=len(self.queue),
             timestamp=now,
             healthy=self.healthy,
+            num_hedged=self.hedged_away,
         )
 
     @property
@@ -326,11 +328,23 @@ class SchedulerCore:
                 [(seq.handle, seq.r) for seq in decoding], now)
             if stats is not None and self.expert is not None:
                 self.expert.observe(stats)
+            cap = self.backend.max_ctx_tokens
             for seq in decoding:
                 r = seq.r
                 r.generated += 1
                 self._grow_ctx(r.req_id)    # decode growth holds KV too
-                if r.generated >= r.max_new_tokens or r.req_id in eos:
+                # finish-at-cap: once this request's KV slot is full there is
+                # nowhere to write the next token — the request MUST finish,
+                # or decode would clamp KV writes to the same position
+                # forever and silently corrupt every later token (the
+                # pre-fix behaviour).  Resident tokens = the prompt the
+                # backend keeps (truncated to cap-1, leaving one write
+                # position) + one committed write per decode step; the
+                # decode that fills the last position is the final one.
+                at_cap = cap is not None and \
+                    min(r.prompt_len, cap - 1) + (r.generated - 1) >= cap
+                if (r.generated >= r.max_new_tokens or r.req_id in eos
+                        or at_cap):
                     r.finish_time = end
                     finished.append(r)
                     self.running.remove(seq)

@@ -58,6 +58,12 @@ class SJFQueue:
     def __len__(self) -> int:
         return len(self._items)
 
+    def __iter__(self):
+        """Public read-only iteration over waiting requests in current queue
+        order (the cluster's hedging scan uses this; mutate only through
+        push/remove/extend/pop_next)."""
+        return iter(list(self._items))
+
     @property
     def waiting_tokens(self) -> int:
         return sum(r.prompt_len for r in self._items)

@@ -41,6 +41,8 @@ class Request:
     aged: bool = False
     preempted: int = 0               # times this request lost its decode slot
     wasted_tokens: int = 0           # generated tokens discarded by preemption
+    hedged_at: Optional[float] = None  # last hedged re-dispatch time
+    hedges: int = 0                  # times this request was hedged
 
     @property
     def rank(self) -> int:
@@ -95,6 +97,7 @@ class EngineMetrics:
     num_waiting: int = 0
     timestamp: float = 0.0
     healthy: bool = True
+    num_hedged: int = 0              # requests hedged AWAY from this engine
 
     @property
     def available(self) -> bool:
@@ -115,6 +118,9 @@ class GimbalConfig:
     enable_dplb: bool = True
     enable_sjf: bool = True
     enable_edr: bool = True
+    # hot-expert replication ("gimbal+rep"): number of redundant expert slots
+    # (None = one per device; E+R must divide the device count)
+    redundancy: Optional[int] = None
     # straggler mitigation (beyond-paper, required for 1000+ node runs)
     hedge_threshold: float = 0.0     # >0: re-dispatch if queued longer than this
     # preemptive priority scheduling (beyond-paper, mixed-tenant workloads)

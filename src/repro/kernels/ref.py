@@ -39,6 +39,31 @@ def ref_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def ref_topk_router_replicated(logits: jax.Array, k: int,
+                               replica_slots: jax.Array,
+                               replica_count: jax.Array, num_slots: int
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                          jax.Array]:
+    """Replica-aware fused router: logical ids map to physical slots
+    round-robin on the global selection index ((t*k + j) mod n_replicas,
+    ExpertPlacement.dispatch_slots' rule); capacity positions count per SLOT.
+    Returns (gates (T,k), ids (T,k) logical, slots (T,k) physical,
+    pos (T,k))."""
+    t, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    ids = ids.astype(jnp.int32)
+    sel = (jnp.arange(t, dtype=jnp.int32)[:, None] * k
+           + jnp.arange(k, dtype=jnp.int32)[None, :])
+    ridx = sel % jnp.maximum(replica_count[ids], 1)
+    slots = replica_slots[ids, ridx]
+    onehot = jax.nn.one_hot(slots.reshape(-1), num_slots, dtype=jnp.int32)
+    pos_flat = (jnp.cumsum(onehot, axis=0) - 1) * onehot
+    pos = pos_flat.sum(-1).reshape(t, k).astype(jnp.int32)
+    return gates, ids, slots.astype(jnp.int32), pos
+
+
 def ref_topk_router(logits: jax.Array, k: int
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Fused router: softmax -> top-k (renormalized gates) -> capacity

@@ -9,6 +9,13 @@ softmax state).
 
 Top-k is computed by iterative argmax (k <= 8 for every assigned arch), which
 vectorizes on the VPU without sorting networks.
+
+Replicated placements (hot-expert redundancy, core/placement.py) are handled
+in-kernel by ``topk_router_replicated``: logical expert ids are mapped to one
+of the expert's physical slots round-robin on the global selection index
+((t*k + j) mod n_replicas — the same rule as ExpertPlacement.dispatch_slots),
+and the capacity counter runs over the S = E + R slots, so replicas split a
+hot expert's token stream without a second pass.
 """
 from __future__ import annotations
 
@@ -24,7 +31,8 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 NEG_INF = -2.0 ** 30
 
 
-def _kernel(x_ref, gates_ref, ids_ref, pos_ref, count_ref, *, k: int):
+def _kernel(x_ref, rs_ref, rc_ref, gates_ref, ids_ref, slots_ref, pos_ref,
+            count_ref, *, k: int, num_slots: int, replicated: bool):
     ti = pl.program_id(0)
 
     @pl.when(ti == 0)
@@ -51,24 +59,46 @@ def _kernel(x_ref, gates_ref, ids_ref, pos_ref, count_ref, *, k: int):
     ids = jnp.stack(isel, axis=-1).astype(jnp.int32)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
 
-    # capacity positions: token-major then selection order (GShard rule)
-    flat_ids = ids.reshape(-1)                       # (BT*k,)
-    sel = (jax.lax.broadcasted_iota(jnp.int32, (bt * k, e), 1)
-           == flat_ids[:, None]).astype(jnp.int32)   # (BT*k, E)
-    run = jnp.cumsum(sel, axis=0) - 1                # 0-based within block
-    base = count_ref[...]                            # (1, E) carried counter
-    pos_flat = ((run + base) * sel).sum(-1)          # (BT*k,)
-    count_ref[...] = base + sel.sum(0, keepdims=True)
+    flat_ids = ids.reshape(-1)                       # (BT*k,) logical
+    if replicated:
+        # slot = replica_slots[e, (t*k + j) % replica_count[e]] — one-hot
+        # selects (no gathers; the tables are tiny and live in VMEM)
+        max_rep = rs_ref.shape[1]
+        oh_e = (jax.lax.broadcasted_iota(jnp.int32, (bt * k, e), 1)
+                == flat_ids[:, None]).astype(jnp.float32)         # (BT*k, E)
+        cnt = (oh_e * rc_ref[...].astype(jnp.float32)
+               ).sum(-1).astype(jnp.int32)                        # (BT*k,)
+        sel = (jax.lax.broadcasted_iota(jnp.int32, (bt, k), 0) * k
+               + jax.lax.broadcasted_iota(jnp.int32, (bt, k), 1)
+               + ti * bt * k).reshape(-1)            # global selection index
+        r = sel % jnp.maximum(cnt, 1)
+        # one-hot matmul contraction over E (NOT a 3D broadcast, whose
+        # (BT*k, E, max_rep) intermediate would blow past VMEM at real
+        # shapes); slot ids are small ints, exact in f32
+        rows = oh_e @ rs_ref[...].astype(jnp.float32)    # (BT*k, max_rep)
+        oh_r = (jax.lax.broadcasted_iota(jnp.int32, (bt * k, max_rep), 1)
+                == r[:, None]).astype(jnp.float32)
+        slot_flat = (rows * oh_r).sum(-1).astype(jnp.int32)
+    else:
+        slot_flat = flat_ids
+
+    # capacity positions: token-major then selection order (GShard rule),
+    # counted per PHYSICAL slot
+    sel_oh = (jax.lax.broadcasted_iota(jnp.int32, (bt * k, num_slots), 1)
+              == slot_flat[:, None]).astype(jnp.int32)   # (BT*k, S)
+    run = jnp.cumsum(sel_oh, axis=0) - 1             # 0-based within block
+    base = count_ref[...]                            # (1, S) carried counter
+    pos_flat = ((run + base) * sel_oh).sum(-1)       # (BT*k,)
+    count_ref[...] = base + sel_oh.sum(0, keepdims=True)
 
     gates_ref[...] = gates
     ids_ref[...] = ids
+    slots_ref[...] = slot_flat.reshape(bt, k).astype(jnp.int32)
     pos_ref[...] = pos_flat.reshape(bt, k).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_t", "interpret"))
-def topk_router(logits: jax.Array, k: int, *, block_t: int = 1024,
-                interpret: bool = False):
-    """logits: (T, E).  Returns (gates (T,k) f32, ids (T,k) i32, pos (T,k) i32)."""
+def _call(logits: jax.Array, k: int, replica_slots, replica_count,
+          num_slots: int, block_t: int, interpret: bool):
     t, e = logits.shape
     bt = min(block_t, t)
     tp = -(-t // bt) * bt
@@ -76,11 +106,22 @@ def topk_router(logits: jax.Array, k: int, *, block_t: int = 1024,
         # pad rows route to expert argmax of zeros=0 but are sliced off below
         logits = jnp.pad(logits, ((0, tp - t), (0, 0)),
                          constant_values=NEG_INF / 2)
-    gates, ids, pos = pl.pallas_call(
-        functools.partial(_kernel, k=k),
+    replicated = replica_slots is not None
+    if not replicated:                 # identity tables keep the arity static
+        replica_slots = jnp.arange(e, dtype=jnp.int32)[:, None]
+        replica_count = jnp.ones((e,), jnp.int32)
+    max_rep = replica_slots.shape[1]
+    gates, ids, slots, pos = pl.pallas_call(
+        functools.partial(_kernel, k=k, num_slots=num_slots,
+                          replicated=replicated),
         grid=(tp // bt,),
-        in_specs=[pl.BlockSpec((bt, e), lambda ti: (ti, 0))],
+        in_specs=[
+            pl.BlockSpec((bt, e), lambda ti: (ti, 0)),
+            pl.BlockSpec((e, max_rep), lambda ti: (0, 0)),
+            pl.BlockSpec((1, e), lambda ti: (0, 0)),
+        ],
         out_specs=[
+            pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
             pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
             pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
             pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
@@ -89,10 +130,35 @@ def topk_router(logits: jax.Array, k: int, *, block_t: int = 1024,
             jax.ShapeDtypeStruct((tp, k), jnp.float32),
             jax.ShapeDtypeStruct((tp, k), jnp.int32),
             jax.ShapeDtypeStruct((tp, k), jnp.int32),
+            jax.ShapeDtypeStruct((tp, k), jnp.int32),
         ],
-        scratch_shapes=[pltpu.VMEM((1, e), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, num_slots), jnp.int32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(logits)
-    return gates[:t], ids[:t], pos[:t]
+    )(logits, jnp.asarray(replica_slots, jnp.int32),
+      jnp.asarray(replica_count, jnp.int32).reshape(1, e))
+    return gates[:t], ids[:t], slots[:t], pos[:t]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_t", "interpret"))
+def topk_router(logits: jax.Array, k: int, *, block_t: int = 1024,
+                interpret: bool = False):
+    """logits: (T, E).  Returns (gates (T,k) f32, ids (T,k) i32, pos (T,k) i32)."""
+    t, e = logits.shape
+    gates, ids, _, pos = _call(logits, k, None, None, e, block_t, interpret)
+    return gates, ids, pos
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "num_slots", "block_t", "interpret"))
+def topk_router_replicated(logits: jax.Array, k: int,
+                           replica_slots: jax.Array, replica_count: jax.Array,
+                           num_slots: int, *, block_t: int = 1024,
+                           interpret: bool = False):
+    """Replica-aware router.  replica_slots: (E, max_rep) physical slots per
+    logical expert (padded with the primary); replica_count: (E,);
+    num_slots: S = E + R.  Returns (gates (T,k) f32, ids (T,k) i32 logical,
+    slots (T,k) i32 physical, pos (T,k) i32 position-within-slot)."""
+    return _call(logits, k, replica_slots, replica_count, num_slots,
+                 block_t, interpret)

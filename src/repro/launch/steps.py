@@ -38,8 +38,9 @@ def _n_scan(cfg: ModelConfig) -> int:
 
 
 def placements_input(cfg: ModelConfig) -> Optional[jax.ShapeDtypeStruct]:
-    """(n_moe_layers, E) int32 expert placement perm — the Gimbal expert
-    level's output, a first-class input of every MoE step."""
+    """(n_moe_layers, S) int32 expert placement slot map (slot -> logical
+    expert) — the Gimbal expert level's output, a first-class input of every
+    MoE step.  Training runs unreplicated (S == E, the identity layout)."""
     if not cfg.is_moe:
         return None
     return jax.ShapeDtypeStruct((cfg.num_moe_layers(), cfg.num_experts), jnp.int32)

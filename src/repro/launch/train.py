@@ -66,10 +66,14 @@ def train(arch: str, steps: int = 200, batch: int = 8, seq: int = 128,
             b = data.batch_at(step)
             batch_dev = {k: jax.numpy.asarray(v) for k, v in b.items()}
             if cfg.is_moe:
-                from repro.core.placement import static_placement
-                perm = static_placement(cfg.num_experts, min(ctx.tp, cfg.num_experts))
+                from repro.core.placement import (perm_to_slot_map,
+                                                  static_placement)
+                # training uses the unreplicated identity layout (the static
+                # placement's slot map)
+                inv = perm_to_slot_map(static_placement(
+                    cfg.num_experts, min(ctx.tp, cfg.num_experts)))
                 batch_dev["placements"] = jax.numpy.broadcast_to(
-                    jax.numpy.asarray(perm), (cfg.num_moe_layers(), cfg.num_experts))
+                    jax.numpy.asarray(inv), (cfg.num_moe_layers(), cfg.num_experts))
             if cfg.family == "vlm":
                 batch_dev["vision_embeds"] = jax.numpy.zeros(
                     (batch, cfg.vision_prefix_len, cfg.d_model), cfg.adtype)

@@ -163,7 +163,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Dict[s
 # =============================================================================
 
 def _placement_stack(cfg: ModelConfig, placements) -> Optional[jax.Array]:
-    """placements: None | (L_scan, E) int32 perm array."""
+    """placements: None | (L_scan, S) int32 slot-map array, S = E + R
+    (slot -> logical expert; S == E is the unreplicated permutation case)."""
     if placements is None or not cfg.is_moe:
         return None
     return jnp.asarray(placements, jnp.int32)
@@ -212,8 +213,9 @@ def _scan_attn_stack(params, cfg: ModelConfig, x, positions, cache, cache_pos,
     pstack = _placement_stack(cfg, placements)
 
     def body(x, xs):
-        p, c, flag, perm = xs
-        plc = ExpertPlacement.from_perm(perm) if perm is not None else None
+        p, c, flag, inv = xs
+        plc = (ExpertPlacement.from_slot_map(inv, cfg.num_experts)
+               if inv is not None else None)
         if decode:
             x, newc, aux = B.attn_block_decode(p, cfg, x, c, cache_pos, flag, is_moe,
                                                plc, dispatch_mode, stats, mla_absorb)
@@ -273,7 +275,7 @@ def _scan_interleaved(params, cfg: ModelConfig, x, positions, cache, cache_pos,
                       mla_absorb: bool = False):
     """llama4-style interleaved MoE: scan over super-blocks of
     [1 MoE layer + (moe_every-1) dense layers]."""
-    pstack = _placement_stack(cfg, placements)   # (n_super, E) or None
+    pstack = _placement_stack(cfg, placements)   # (n_super, S) or None
 
     def apply_block(p, x, c, is_moe_layer):
         if decode:
@@ -286,8 +288,9 @@ def _scan_interleaved(params, cfg: ModelConfig, x, positions, cache, cache_pos,
                                  stats and is_moe_layer)
 
     def super_body(x, xs):
-        pm, pd, cm, cd, perm = xs
-        apply_block.plc = ExpertPlacement.from_perm(perm) if perm is not None else None
+        pm, pd, cm, cd, inv = xs
+        apply_block.plc = (ExpertPlacement.from_slot_map(inv, cfg.num_experts)
+                           if inv is not None else None)
         x, new_cm, aux = apply_block(pm, x, cm, True)
         x = _seq_constraint(x)
 

@@ -1,12 +1,18 @@
-"""Mixture-of-Experts layer with placement-aware dispatch.
+"""Mixture-of-Experts layer with placement-aware, replica-splitting dispatch.
 
-The Gimbal expert level (core/placement.py) produces a *placement permutation*
-``perm`` mapping logical expert id -> physical slot.  Expert weights are stored
-in SLOT order and sharded over the ``model`` mesh axis (slot s lives on chip
-s // (E / |model|)), so relocating an expert == permuting the stacked weight
-arrays + updating ``perm``.  The router works in logical-expert space and maps
-selected ids through ``perm`` before dispatch, so placement never changes
-numerics — property-tested in tests/test_placement.py.
+The Gimbal expert level (core/placement.py) produces a *placement*: a slot map
+over S = E + R physical slots (R >= 0 redundant replicas of hot experts).
+Expert weights are stored in SLOT order and sharded over the ``model`` mesh
+axis (slot s lives on chip s // (S / |model|)), so relocating or replicating
+an expert == gathering the stacked weight arrays + updating the placement.
+The router works in logical-expert space and maps selected ids to slots via
+``ExpertPlacement.dispatch_slots`` (round-robin over an expert's replicas)
+before dispatch.  Placement never changes numerics as long as no token is
+capacity-dropped (property-tested in tests/test_placement.py and
+tests/test_models.py); under overflow, each replica slot carries its own
+capacity budget, so replicating a hot expert can only RESCUE tokens the
+unreplicated placement would have dropped — fewer drops, never different
+routing for surviving tokens.
 
 Two dispatch strategies (same numerics; §Perf compares them):
   * "dense"  — GShard/Switch-style one-hot einsum dispatch (classic TPU MoE,
@@ -27,20 +33,77 @@ from repro.models.layers import init_ffn
 
 
 class ExpertPlacement(NamedTuple):
-    """perm[e] = physical slot of logical expert e;  inv[s] = logical expert in slot s."""
-    perm: jax.Array   # (E,) int32
-    inv: jax.Array    # (E,) int32
+    """Replicated expert placement over S = E + R physical slots.
+
+    ``inv[s]`` = logical expert in slot s (every expert holds >= 1 slot; the
+    R redundant slots hold replicas of hot experts).  ``perm[e]`` = primary
+    (lowest) slot of expert e.  ``replica_slots[e, r]`` enumerates e's slots,
+    padded by repeating the primary so shapes stay static; ``replica_count[e]``
+    is the true copy count.  Dispatch splits a token stream round-robin over
+    an expert's replicas (see moe_apply); every replica holds identical
+    weights, so surviving tokens compute identically — replication can only
+    reduce capacity drops (each copy has its own capacity budget).  R=0
+    reduces to the old pure permutation."""
+    perm: jax.Array            # (E,) int32 primary slot per logical expert
+    inv: jax.Array             # (S,) int32 logical expert per slot
+    replica_slots: jax.Array   # (E, max_rep) int32, padded with the primary
+    replica_count: jax.Array   # (E,) int32
+
+    @property
+    def num_slots(self) -> int:
+        return self.inv.shape[0]
+
+    @property
+    def num_experts(self) -> int:
+        return self.perm.shape[0]
 
     @staticmethod
     def identity(num_experts: int) -> "ExpertPlacement":
         eye = jnp.arange(num_experts, dtype=jnp.int32)
-        return ExpertPlacement(perm=eye, inv=eye)
+        return ExpertPlacement(perm=eye, inv=eye,
+                               replica_slots=eye[:, None],
+                               replica_count=jnp.ones_like(eye))
 
     @staticmethod
     def from_perm(perm) -> "ExpertPlacement":
         perm = jnp.asarray(perm, jnp.int32)
         inv = jnp.zeros_like(perm).at[perm].set(jnp.arange(perm.shape[0], dtype=jnp.int32))
-        return ExpertPlacement(perm=perm, inv=inv)
+        return ExpertPlacement(perm=perm, inv=inv,
+                               replica_slots=perm[:, None],
+                               replica_count=jnp.ones_like(perm))
+
+    @staticmethod
+    def from_slot_map(inv, num_experts: int) -> "ExpertPlacement":
+        """Build from a slot map (core/placement.py ``*_rep`` solvers).  All
+        shapes are static in (S, E), so this is jit/scan-safe."""
+        inv = jnp.asarray(inv, jnp.int32)
+        s, e = inv.shape[0], num_experts
+        max_rep = s - e + 1                      # static copy-count bound
+        onehot = inv[None, :] == jnp.arange(e, dtype=jnp.int32)[:, None]  # (E,S)
+        count = onehot.sum(1).astype(jnp.int32)
+        rank = jnp.cumsum(onehot, axis=1) * onehot           # 1-based per slot
+        slots_row = jnp.arange(s, dtype=jnp.int32)[None, :]
+        cols = [jnp.where(rank == r + 1, slots_row, s).min(1)
+                for r in range(max_rep)]                     # s == "absent"
+        tbl = jnp.stack(cols, axis=1)
+        primary = tbl[:, 0]
+        tbl = jnp.where(tbl == s, primary[:, None], tbl)
+        return ExpertPlacement(perm=primary.astype(jnp.int32), inv=inv,
+                               replica_slots=tbl.astype(jnp.int32),
+                               replica_count=count)
+
+    def dispatch_slots(self, expert_ids: jax.Array) -> jax.Array:
+        """Physical slot per selection with round-robin load splitting:
+        selection (t, j) of a replicated expert goes to replica
+        (t*k + j) mod n_replicas.  expert_ids: (T, k) logical -> (T, k)
+        slots.  The divisor is clamped to 1 (same guard as the Pallas
+        kernel) so a malformed slot map missing an expert cannot
+        mod-by-zero."""
+        t, k = expert_ids.shape
+        sel = (jnp.arange(t, dtype=jnp.int32)[:, None] * k
+               + jnp.arange(k, dtype=jnp.int32)[None, :])
+        ridx = sel % jnp.maximum(self.replica_count[expert_ids], 1)
+        return self.replica_slots[expert_ids, ridx]
 
 
 def init_moe(key, cfg: ModelConfig) -> dict:
@@ -117,15 +180,16 @@ def moe_apply(params: dict, cfg: ModelConfig, x: jax.Array,
     logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["w_router"])
     probs = router_probs(logits)                                   # logical space
     gates, expert_ids = top_k_gating(probs, k)                     # (T,k) logical
-    slot_idx = placement.perm[expert_ids]                          # physical slots
+    slot_idx = placement.dispatch_slots(expert_ids)                # physical slots
+    ns = placement.num_slots                                       # S = E + R
 
     cap = _capacity(cfg, t)
-    pos, keep = _dispatch_tables(slot_idx, gates, e, cap)
+    pos, keep = _dispatch_tables(slot_idx, gates, ns, cap)
     gates = gates.astype(x.dtype)
 
     if dispatch_mode == "dense":
-        # (T,k,E) x (T,k,C) -> dispatch (T,E,C)
-        oh_e = jax.nn.one_hot(slot_idx, e, dtype=x.dtype) * keep[..., None]
+        # (T,k,S) x (T,k,C) -> dispatch (T,S,C)
+        oh_e = jax.nn.one_hot(slot_idx, ns, dtype=x.dtype) * keep[..., None]
         oh_c = jax.nn.one_hot(pos, cap, dtype=x.dtype)
         dispatch = jnp.einsum("tke,tkc->tec", oh_e, oh_c)
         combine = jnp.einsum("tke,tkc,tk->tec", oh_e, oh_c, gates)
@@ -133,22 +197,22 @@ def moe_apply(params: dict, cfg: ModelConfig, x: jax.Array,
         ye = _expert_ffn(params, xe)
         y = jnp.einsum("tec,ecd->td", combine, ye)
     elif dispatch_mode == "gather":
-        # token-index table (E, C): which token sits in slot (e, c)
+        # token-index table (S, C): which token sits in slot (s, c)
         tok_ids = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None], (t, k)).reshape(-1)
-        slot_flat = jnp.where(keep, slot_idx, e).reshape(-1)       # dropped -> slot e (overflow row)
+        slot_flat = jnp.where(keep, slot_idx, ns).reshape(-1)      # dropped -> slot S (overflow row)
         pos_flat = jnp.where(keep, pos, 0).reshape(-1)
-        table = jnp.full((e + 1, cap), t, dtype=jnp.int32)         # t == "no token"
+        table = jnp.full((ns + 1, cap), t, dtype=jnp.int32)        # t == "no token"
         table = table.at[slot_flat, pos_flat].set(tok_ids, mode="drop")
-        table = table[:e]                                          # (E, C)
+        table = table[:ns]                                         # (S, C)
         valid = table < t
         xe = jnp.where(valid[..., None],
                        jnp.take(xf, jnp.minimum(table, t - 1), axis=0), 0).astype(x.dtype)
         ye = _expert_ffn(params, xe)
         # combine: scatter-add expert outputs back, weighted by gate
-        gate_tbl = jnp.zeros((e + 1, cap), x.dtype).at[slot_flat, pos_flat].set(
-            (gates * keep).reshape(-1), mode="drop")[:e]
+        gate_tbl = jnp.zeros((ns + 1, cap), x.dtype).at[slot_flat, pos_flat].set(
+            (gates * keep).reshape(-1), mode="drop")[:ns]
         y = jnp.zeros((t, d), x.dtype).at[jnp.minimum(table, t - 1).reshape(-1)].add(
-            (ye * gate_tbl[..., None]).reshape(e * cap, d) *
+            (ye * gate_tbl[..., None]).reshape(ns * cap, d) *
             valid.reshape(-1, 1).astype(x.dtype), mode="drop")
     else:
         raise ValueError(f"unknown dispatch_mode {dispatch_mode!r}")
@@ -174,8 +238,10 @@ def moe_apply(params: dict, cfg: ModelConfig, x: jax.Array,
 
 def permute_expert_weights(params: dict, old: ExpertPlacement, new: ExpertPlacement) -> dict:
     """Physically relocate stacked expert weights from placement `old` to `new`.
-    slot_new[new.perm[e]] = slot_old[old.perm[e]]."""
-    gather_idx = old.perm[new.inv]    # for each new slot, which old slot holds that expert
+    Works across slot counts: each new slot gathers its expert's weights from
+    that expert's primary slot under `old`, so growing E -> E+R slots
+    materializes the replica copies."""
+    gather_idx = old.perm[new.inv]    # for each new slot, an old slot holding that expert
     out = dict(params)
     for name in ("w_gate", "w_up", "w_down"):
         out[name] = params[name][gather_idx]

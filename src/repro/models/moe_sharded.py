@@ -16,9 +16,12 @@ over the model axis (seq-parallel residual), ranks exchange routed tokens with
 jax.lax.all_to_all, compute, and exchange back — traffic scales with top_k/EP
 instead of the full token set; better when top_k << EP degree.
 
-The placement permutation (Gimbal Alg. 3) maps logical expert -> physical slot;
-slot s lives on EP rank s // (E / tp).  Relocating an expert only rewrites the
-perm + permutes the stacked weights; numerics are invariant.
+The placement (Gimbal Alg. 3, optionally with hot-expert replication) maps
+S = E + R physical slots -> logical experts; slot s lives on EP rank
+s // (S / tp), and a token stream is split round-robin over an expert's
+replicas (ExpertPlacement.dispatch_slots).  Relocating or replicating an
+expert only rewrites the slot map + gathers the stacked weights; numerics are
+invariant.
 """
 from __future__ import annotations
 
@@ -71,10 +74,11 @@ def moe_apply_sharded(params: dict, cfg: ModelConfig, x: jax.Array,
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.moe_top_k
     tp = ctx.tp
-    assert divides(e, tp), f"experts {e} must divide model axis {tp}"
-    e_loc = e // tp
     if placement is None:
         placement = ExpertPlacement.identity(e)
+    ns = placement.num_slots                  # S = E + R physical expert slots
+    assert divides(ns, tp), f"model axis {tp} must divide expert slots {ns}"
+    e_loc = ns // tp                          # slots owned per EP rank
 
     bdim = 1
     for a in ctx.batch_axes:
@@ -91,7 +95,7 @@ def moe_apply_sharded(params: dict, cfg: ModelConfig, x: jax.Array,
     logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["w_router"])
     probs = router_probs(logits)
     gates, expert_ids = top_k_gating(probs, k)
-    slot_idx = placement.perm[expert_ids]                     # physical slots
+    slot_idx = placement.dispatch_slots(expert_ids)           # replica-split slots
     gates = gates.astype(x.dtype)
 
     wg_spec = P("model", None, "data" if f_sharded else None)
@@ -116,15 +120,15 @@ def moe_apply_sharded(params: dict, cfg: ModelConfig, x: jax.Array,
         wd_ = _fsdp_gather(wd, 1, f_sharded)
 
         cap_c = _capacity(cfg, tc)                       # per-chunk capacity
-        pos, keep = _dispatch_tables(sr, gr, e, cap_c)
+        pos, keep = _dispatch_tables(sr, gr, ns, cap_c)
         tok_ids = jnp.broadcast_to(jnp.arange(tc, dtype=jnp.int32)[:, None],
                                    (tc, k)).reshape(-1)
-        slot_flat = jnp.where(keep, sr, e).reshape(-1)
+        slot_flat = jnp.where(keep, sr, ns).reshape(-1)
         pos_flat = jnp.where(keep, pos, 0).reshape(-1)
-        table = jnp.full((e + 1, cap_c), tc, dtype=jnp.int32)
-        table = table.at[slot_flat, pos_flat].set(tok_ids, mode="drop")[:e]
-        gate_tbl = jnp.zeros((e + 1, cap_c), x.dtype).at[slot_flat, pos_flat].set(
-            (gr * keep).reshape(-1), mode="drop")[:e]
+        table = jnp.full((ns + 1, cap_c), tc, dtype=jnp.int32)
+        table = table.at[slot_flat, pos_flat].set(tok_ids, mode="drop")[:ns]
+        gate_tbl = jnp.zeros((ns + 1, cap_c), x.dtype).at[slot_flat, pos_flat].set(
+            (gr * keep).reshape(-1), mode="drop")[:ns]
         valid = table < tc
         safe = jnp.minimum(table, tc - 1)
         xe_send = jnp.where(valid[..., None], jnp.take(xr, safe, axis=0), 0)
@@ -140,10 +144,10 @@ def moe_apply_sharded(params: dict, cfg: ModelConfig, x: jax.Array,
         ye = jnp.einsum("ecf,efd->ecd", act, wd_)
         ye = ye.reshape(e_loc, tp, cap_c, d).transpose(1, 0, 2, 3)
         ye_back = jax.lax.all_to_all(ye, "model", 0, 0)  # back to sources
-        ye_back = ye_back.reshape(e, cap_c, d)           # my tokens' outputs
+        ye_back = ye_back.reshape(ns, cap_c, d)          # my tokens' outputs
 
         yr = jnp.zeros((tc, d), x.dtype).at[safe.reshape(-1)].add(
-            (ye_back * gate_tbl[..., None]).reshape(e * cap_c, d)
+            (ye_back * gate_tbl[..., None]).reshape(ns * cap_c, d)
             * valid.reshape(-1, 1).astype(x.dtype), mode="drop")
         # restore model-replication of the residual stream
         y = jax.lax.all_gather(yr, "model", axis=0, tiled=True)
@@ -168,18 +172,18 @@ def moe_apply_sharded(params: dict, cfg: ModelConfig, x: jax.Array,
             wu = _fsdp_gather(wu, 2, f_sharded)
             wd = _fsdp_gather(wd, 1, f_sharded)
 
-        pos, keep = _dispatch_tables(slots, gt, e, cap)
-        # token-index table over ALL slots, then slice this rank's experts
+        pos, keep = _dispatch_tables(slots, gt, ns, cap)
+        # token-index table over ALL slots, then slice this rank's slots
         tok_ids = jnp.broadcast_to(jnp.arange(tl, dtype=jnp.int32)[:, None],
                                    (tl, k)).reshape(-1)
-        slot_flat = jnp.where(keep, slots, e).reshape(-1)
+        slot_flat = jnp.where(keep, slots, ns).reshape(-1)
         pos_flat = jnp.where(keep, pos, 0).reshape(-1)
-        table = jnp.full((e + 1, cap), tl, dtype=jnp.int32)
+        table = jnp.full((ns + 1, cap), tl, dtype=jnp.int32)
         table = table.at[slot_flat, pos_flat].set(tok_ids, mode="drop")
-        gate_tbl = jnp.zeros((e + 1, cap), x.dtype).at[slot_flat, pos_flat].set(
+        gate_tbl = jnp.zeros((ns + 1, cap), x.dtype).at[slot_flat, pos_flat].set(
             (gt * keep).reshape(-1), mode="drop")
-        table = jax.lax.dynamic_slice_in_dim(table[:e], r * e_loc, e_loc, 0)
-        gate_tbl = jax.lax.dynamic_slice_in_dim(gate_tbl[:e], r * e_loc, e_loc, 0)
+        table = jax.lax.dynamic_slice_in_dim(table[:ns], r * e_loc, e_loc, 0)
+        gate_tbl = jax.lax.dynamic_slice_in_dim(gate_tbl[:ns], r * e_loc, e_loc, 0)
 
         valid = table < tl
         safe = jnp.minimum(table, tl - 1)

@@ -66,7 +66,7 @@ class JaxBackend:
         self.slot_last_token = np.zeros(max_slots, np.int32)
         self.relocations = 0
         self._n_scan = model_cfg.num_moe_layers()
-        self._applied_perm: Optional[np.ndarray] = None
+        self._applied_map: Optional[np.ndarray] = None   # slot -> logical
         self._jit_decode = jax.jit(self._decode_fn)
         # One compiled prefill per BUCKETED length: prompts are padded to the
         # next power-of-two bucket and the jit cache is keyed on that bucket,
@@ -80,6 +80,21 @@ class JaxBackend:
         if self.rebalancer is None:
             return None
         return jnp.asarray(self.rebalancer.placement_stack(self._n_scan))
+
+    def _sync_placement(self) -> None:
+        """Catch up with the (possibly cluster-shared) expert level: when
+        ANOTHER engine's core tick fired the rebalance, this backend sees the
+        new slot map here, before its next forward pass — weights and
+        placement always move together."""
+        rb = self.rebalancer
+        if rb is None or getattr(rb, "slot_map", None) is None:
+            return
+        tgt = np.asarray(rb.slot_map)
+        cur = self._applied_map
+        if cur is None:
+            cur = np.arange(self.cfg.num_experts)   # initial identity layout
+        if not np.array_equal(cur, tgt):
+            self.apply_placement(tgt)
 
     def _decode_fn(self, params, tokens, cache, cache_pos, placements):
         stats = self.cfg.is_moe and self.rebalancer is not None
@@ -102,6 +117,7 @@ class JaxBackend:
     # ------------------------------------------------------------------ Backend protocol
     def start(self, r: Request, now: float
               ) -> Tuple[int, Optional[np.ndarray]]:
+        self._sync_placement()
         slot = self.kv.alloc()
         assert slot is not None, "SchedulerCore admitted past slot capacity"
         plen = min(r.prompt_len, self.max_seq - 1)
@@ -128,6 +144,7 @@ class JaxBackend:
 
     def decode(self, active: Sequence[Tuple[int, Request]], now: float
                ) -> Tuple[Set[int], Optional[np.ndarray]]:
+        self._sync_placement()
         tokens = jnp.asarray(self.slot_last_token)[:, None]
         pos = self.kv.positions()
         logits, new_cache, aux = self._jit_decode(
@@ -159,25 +176,33 @@ class JaxBackend:
     def kv_usage(self, kv_tokens: int) -> float:
         return self.kv.usage()
 
-    def apply_placement(self, new_perm: np.ndarray) -> None:
-        """EDR fired: physically permute the stacked expert weights to match
-        the new placement.  Numerics are invariant (tests/test_placement.py)."""
-        from repro.core.placement import static_placement
-        from repro.models.moe import ExpertPlacement
-        self.relocations += 1
+    def apply_placement(self, new_map: np.ndarray) -> None:
+        """EDR fired: physically gather the stacked expert weights into the
+        new slot layout (``new_map``: S = E + R slots -> logical expert; a
+        replicated expert's weights are copied into each of its slots).
+        Numerics are invariant (tests/test_placement.py, test_engine.py).
+        Param trees without a stacked 'moe' block (non-MoE or interleaved
+        layouts this backend doesn't relocate) are left untouched and do NOT
+        count as a relocation."""
         blocks = self.params["blocks"]
         if "moe" not in blocks:
             return
-        # weights are currently laid out for the PREVIOUS perm; we need
-        # old perm -> new perm
-        old_perm = self._applied_perm
-        if old_perm is None:
-            # initial layout is the static placement (== identity slot order)
-            old_perm = np.asarray(static_placement(self.cfg.num_experts,
-                                                   self.rebalancer.g))
-        old = ExpertPlacement.from_perm(old_perm)
-        new = ExpertPlacement.from_perm(new_perm)
-        gather_idx = old.perm[new.inv]
+        new_map = np.asarray(new_map)
+        # weights are currently laid out for the PREVIOUS slot map (initial
+        # layout == identity: slot s holds logical expert s)
+        old_map = self._applied_map
+        if old_map is None:
+            old_map = np.arange(self.cfg.num_experts)
+        if np.array_equal(old_map, new_map):
+            return                  # already laid out — not a relocation
+        self.relocations += 1
+        # each new slot gathers from ONE old slot holding its expert (the
+        # expert's first old slot — every expert has >= 1)
+        old_primary = np.full(self.cfg.num_experts, -1, np.int64)
+        for s in range(len(old_map) - 1, -1, -1):
+            old_primary[int(old_map[s])] = s
+        gather_idx = old_primary[new_map]
+        assert (gather_idx >= 0).all(), "new placement names an unknown expert"
         moe = dict(blocks["moe"])
         for name in ("w_gate", "w_up", "w_down"):
             moe[name] = blocks["moe"][name][:, gather_idx]
@@ -185,4 +210,4 @@ class JaxBackend:
         blocks["moe"] = moe
         self.params = dict(self.params)
         self.params["blocks"] = blocks
-        self._applied_perm = np.asarray(new_perm).copy()
+        self._applied_map = new_map.copy()

@@ -26,13 +26,22 @@ from repro.serving.metrics import (MetricsBus, summarize, summarize_by_class,
 
 class Cluster:
     def __init__(self, engines: Sequence[Engine], variant: str = "gimbal",
-                 gimbal_cfg: Optional[GimbalConfig] = None, bus_delay: float = 0.05):
+                 gimbal_cfg: Optional[GimbalConfig] = None, bus_delay: float = 0.05,
+                 expert_level=None):
+        """``expert_level``: the ONE ClusterExpertLevel every engine was built
+        with (core/gimbal.make_cluster_expert_level) — the cluster owns the
+        cluster-wide expert telemetry and exposes its RebalanceEvent stream /
+        coupling factors via ``expert_report()``.  When omitted, falls back
+        to the first engine's level (which is only cluster-wide if the caller
+        shared it across engines)."""
         self.gcfg = gimbal_cfg or GimbalConfig()
         self.engines: Dict[int, Engine] = {e.engine_id: e for e in engines}
         self.router = make_router(variant, list(self.engines), self.gcfg)
         self.bus = MetricsBus(delay=bus_delay)
         self.finished: List[Request] = []
         self.variant = variant
+        self.expert_level = expert_level if expert_level is not None else next(
+            (e.core.expert for e in engines if e.core.expert is not None), None)
 
     # ------------------------------------------------------------------ dispatch
     def submit(self, r: Request, now: float) -> int:
@@ -75,9 +84,9 @@ class Cluster:
         for e in self.engines.values():
             if not e.healthy:
                 continue
-            for r in e.queue._items:
-                last = getattr(r, "_hedged_at", None)
-                if last is not None and now - last < self.gcfg.hedge_threshold:
+            for r in e.queue:            # public iteration, waiting order
+                if (r.hedged_at is not None
+                        and now - r.hedged_at < self.gcfg.hedge_threshold):
                     continue  # cooldown: one hedge per threshold window
                 tgt = self.router.hedge_target(r, metrics, now)
                 if tgt is not None and tgt != e.engine_id:
@@ -85,7 +94,9 @@ class Cluster:
         for e, r, tgt in moves:
             e.queue.remove(r)
             r.engine_id = tgt
-            r._hedged_at = now
+            r.hedged_at = now
+            r.hedges += 1
+            e.core.hedged_away += 1
             self.engines[tgt].submit(r, now)
 
     # ------------------------------------------------------------------ fault tolerance
@@ -130,6 +141,23 @@ class Cluster:
 
     def preemption_stats(self) -> Dict[str, int]:
         return {"preemptions": sum(e.preemptions for e in self.engines.values())}
+
+    def hedge_stats(self) -> Dict[str, int]:
+        """Straggler-mitigation counters: total hedged re-dispatches (each
+        engine counts requests hedged AWAY from its queue)."""
+        return {"hedges": sum(e.core.hedged_away
+                              for e in self.engines.values())}
+
+    def expert_report(self) -> Dict[str, float]:
+        """Cluster-wide expert-level telemetry: the shared level's coupling
+        factors, migration counters and RebalanceEvent count — directly
+        comparable with the simulator's (SimResult.moe_mult_final etc.)."""
+        lvl = self.expert_level
+        if lvl is None:
+            return {"moe_mult": 1.0, "cross_frac": 0.0, "migrations": 0,
+                    "bytes_moved": 0}
+        return {"moe_mult": lvl.moe_mult, "cross_frac": lvl.cross_frac,
+                "migrations": lvl.migrations, "bytes_moved": lvl.bytes_moved}
 
     def prefix_stats(self) -> Dict[str, float]:
         hits = sum(e.prefix.hit_blocks for e in self.engines.values())

@@ -16,12 +16,23 @@ from __future__ import annotations
 
 from typing import Any, List, Optional
 
-from repro.core.eplb import ExpertRebalancer
+from repro.core.eplb import ExpertRebalancer, NullExpertLevel
 from repro.core.gimbal import make_queue, make_rebalancer
 from repro.core.scheduler import SchedulerCore
 from repro.core.types import EngineMetrics, GimbalConfig, Request
 from repro.models import config as mcfg
 from repro.serving.backend import JaxBackend
+
+class _Private:
+    """Sentinel: build this engine its own expert level.  (A class with a
+    stable repr, not a bare object(), so generated API docs stay
+    deterministic.)"""
+
+    def __repr__(self):
+        return "<build a private expert level>"
+
+
+_PRIVATE = _Private()
 
 
 class Engine:
@@ -29,12 +40,23 @@ class Engine:
                  variant: str = "gimbal", gimbal_cfg: Optional[GimbalConfig] = None,
                  max_slots: int = 4, max_seq: int = 256, prefill_budget: int = 512,
                  num_expert_devices: int = 4, eos_id: Optional[int] = None,
-                 dispatch_mode: str = "dense"):
+                 dispatch_mode: str = "dense", expert_level: Any = _PRIVATE):
+        """``expert_level`` should be the ONE ClusterExpertLevel shared by
+        every engine of a cluster (core/gimbal.make_cluster_expert_level):
+        experts are EP-sharded across all engines' devices (§V-A.1), so
+        routed stats from every engine aggregate into the same tracker and
+        all engines apply the same placements.  When omitted, the engine
+        builds a private level over ``num_expert_devices`` devices (the
+        historical single-engine behaviour)."""
         self.engine_id = engine_id
         self.cfg = model_cfg
         self.gcfg = gimbal_cfg or GimbalConfig()
-        rebalancer = make_rebalancer(variant, model_cfg, num_expert_devices,
-                                     self.gcfg)
+        if expert_level is _PRIVATE:
+            rebalancer = make_rebalancer(variant, model_cfg,
+                                         num_expert_devices, self.gcfg)
+        else:
+            rebalancer = (None if isinstance(expert_level, NullExpertLevel)
+                          else expert_level)
         self.backend = JaxBackend(model_cfg, params, max_slots=max_slots,
                                   max_seq=max_seq, eos_id=eos_id,
                                   dispatch_mode=dispatch_mode,

@@ -25,14 +25,17 @@ class CostModelBackend:
     charge_prefix_hits = True
 
     def __init__(self, cost: CostModel, expert_level, *,
-                 max_running: int = 256, kv_pool_tokens: int = 0):
+                 max_running: int = 256, kv_pool_tokens: int = 0,
+                 max_ctx_tokens: Optional[int] = None):
         self.cost = cost
         self.expert = expert_level          # shared across engines (EP-sharded)
         self.max_concurrency = max_running
         # 0 -> cost-model capacity estimate
         self.kv_capacity = kv_pool_tokens or cost.kv_capacity_tokens()
-        # no per-request cap: the pool itself is the only KV constraint
-        self.max_ctx_tokens: Optional[int] = None
+        # per-request resident-KV cap (None = the pool is the only KV
+        # constraint).  Set it to the live engine's slot length when twinning
+        # a JaxBackend so finish-at-cap decisions stay in parity.
+        self.max_ctx_tokens = max_ctx_tokens
 
     # ------------------------------------------------------------------ Backend protocol
     def start(self, r: Request, now: float
@@ -51,9 +54,12 @@ class CostModelBackend:
 
     def step_time(self, now: float, prefill_tokens: int, decode_batch: int,
                   avg_ctx: float, queue_len: int) -> float:
+        e = self.cost.cfg.num_experts if self.cost.cfg.is_moe else 1
+        rep = getattr(self.expert, "num_slots", e) / max(e, 1)
         return now + self.cost.iteration_time(
             prefill_tokens, decode_batch, avg_ctx,
-            self.expert.moe_mult, self.expert.cross_frac, queue_len=queue_len)
+            self.expert.moe_mult, self.expert.cross_frac, queue_len=queue_len,
+            rep_factor=rep)
 
     def kv_usage(self, kv_tokens: int) -> float:
         return min(kv_tokens / self.kv_capacity, 1.0)

@@ -11,6 +11,9 @@ from __future__ import annotations
 
 import dataclasses
 
+# the coupling-factor computation lives with the placement math in
+# core/placement.py; re-exported here because the cost model is its consumer
+from repro.core.placement import placement_coupling  # noqa: F401
 from repro.models.config import ModelConfig
 
 
@@ -108,11 +111,14 @@ class CostModel:
         return max(t_comp, t_mem) + self._a2a_time(tokens, cross_frac)
 
     def decode_time(self, batch: int, avg_ctx: float, moe_mult: float = 1.0,
-                    cross_frac: float = 0.5) -> float:
-        """Memory-bound phase: weights resident on this device + KV reads."""
+                    cross_frac: float = 0.5, rep_factor: float = 1.0) -> float:
+        """Memory-bound phase: weights resident on this device + KV reads.
+        ``rep_factor`` = S/E, the replicated-placement weight blow-up: each
+        device holds S/g expert slots instead of E/g."""
         if batch <= 0:
             return 0.0
-        weight_bytes = self.nonexpert_bytes + (self.expert_bytes / self.g) * moe_mult
+        weight_bytes = self.nonexpert_bytes \
+            + (self.expert_bytes * rep_factor / self.g) * moe_mult
         kv = batch * avg_ctx * self.kv_bytes_tok
         t_mem = (weight_bytes + kv) / (self.hw.hbm_bw * self.hw.bw_eff)
         t_comp = self._compute_time(2.0 * self.active_params * batch, moe_mult, batch)
@@ -120,11 +126,12 @@ class CostModel:
 
     def iteration_time(self, prefill_tokens: int, decode_batch: int, avg_ctx: float,
                        moe_mult: float = 1.0, cross_frac: float = 0.5,
-                       queue_len: int = 0) -> float:
+                       queue_len: int = 0, rep_factor: float = 1.0) -> float:
         return (self.hw.step_overhead
                 + self.hw.sched_overhead_per_seq * (decode_batch + queue_len)
                 + self.prefill_time(prefill_tokens, moe_mult, cross_frac)
-                + self.decode_time(decode_batch, avg_ctx, moe_mult, cross_frac))
+                + self.decode_time(decode_batch, avg_ctx, moe_mult, cross_frac,
+                                   rep_factor))
 
     def migration_time(self, bytes_moved: int) -> float:
         return bytes_moved / (self.hw.link_bw * self.hw.bw_eff)

@@ -47,11 +47,13 @@ class SimEngine:
 
     def __init__(self, engine_id: int, cost: CostModel, gcfg: GimbalConfig,
                  sjf: bool, expert_level, *, prefill_budget: int = 2048,
-                 max_running: int = 256, kv_pool_tokens: int = 0):
+                 max_running: int = 256, kv_pool_tokens: int = 0,
+                 max_ctx_tokens=None):
         self.engine_id = engine_id
         self.backend = CostModelBackend(cost, expert_level,
                                         max_running=max_running,
-                                        kv_pool_tokens=kv_pool_tokens)
+                                        kv_pool_tokens=kv_pool_tokens,
+                                        max_ctx_tokens=max_ctx_tokens)
         # vLLM's prefix cache IS the KV block pool: bound + LRU-churn it
         prefix = PrefixCache(
             capacity_blocks=max(self.backend.kv_capacity // 16, 256))
@@ -94,6 +96,11 @@ class SimResult:
     cross_frac_final: float
     migrations: int
     per_engine_steps: List[int]
+    # (step, moe_mult) after every placement update of the shared
+    # ClusterExpertLevel — the hotspot-multiplier trajectory the campaign's
+    # hot-expert-skew cells record
+    moe_mult_trajectory: List[Tuple[int, float]] = dataclasses.field(
+        default_factory=list)
     report_by_class: Dict[str, LatencyReport] = dataclasses.field(
         default_factory=dict)
     preemptions: int = 0
@@ -113,14 +120,20 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
              gcfg: Optional[GimbalConfig] = None, seed: int = 0,
              horizon: Optional[float] = None, prefill_budget: int = 2048,
              max_running: int = 256, metric_delay: float = 0.05,
-             kv_pool_tokens: int = 0) -> SimResult:
-    """Run one experiment: a trace against one variant (paper §V-A.7)."""
+             kv_pool_tokens: int = 0, hot_boost: float = 8.0) -> SimResult:
+    """Run one experiment: a trace against one variant (paper §V-A.7).
+
+    ``hot_boost`` is the hot-expert-skew knob: how hot the synthetic prior's
+    hot experts run (8.0 = the paper's Fig. 3 shape; the campaign's hotspot
+    cells raise it to stress replication)."""
     gcfg = gcfg or GimbalConfig()
     hwp = PROFILES[hw] if isinstance(hw, str) else hw
     flags = variant_flags(variant)
     router = make_router(variant, list(range(n_engines)), gcfg)
     bus = MetricsBus(delay=metric_delay)
-    experts = make_sim_expert_level(variant, cfg, n_engines, gcfg, seed=seed)
+    # ONE cluster-wide expert level shared by every engine core (§V-A.1)
+    experts = make_sim_expert_level(variant, cfg, n_engines, gcfg, seed=seed,
+                                    hot_boost=hot_boost)
 
     engines = [SimEngine(i, CostModel(cfg, hwp, n_engines), gcfg, flags["sjf"],
                          experts, prefill_budget=prefill_budget,
@@ -168,6 +181,7 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
         prefix_hits=hits, prefix_probed=probed,
         moe_mult_final=experts.moe_mult, cross_frac_final=experts.cross_frac,
         migrations=experts.migrations, per_engine_steps=steps,
+        moe_mult_trajectory=list(getattr(experts, "factor_trail", [])),
         report_by_class=summarize_by_class(finished, horizon),
         preemptions=sum(e.preemptions for e in engines),
         report_by_tenant=summarize_by_tenant(finished, horizon),

@@ -10,6 +10,10 @@ from repro.configs import (ASSIGNED_ARCHS, get_config, get_smoke_config,
                            list_archs)
 from repro.models import model as M
 
+# compile-heavy (jits real JAX models / Pallas kernels on CPU): runs in
+# the full CI job; the PR lane runs `-m 'not slow'` (see README)
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", list_archs())
 def test_smoke_forward_and_decode(arch):

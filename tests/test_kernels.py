@@ -7,7 +7,11 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.moe_gemm import moe_gemm
-from repro.kernels.topk_router import topk_router
+from repro.kernels.topk_router import topk_router, topk_router_replicated
+
+# compile-heavy (jits real JAX models / Pallas kernels on CPU): runs in
+# the full CI job; the PR lane runs `-m 'not slow'` (see README)
+pytestmark = pytest.mark.slow
 
 TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
        jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
@@ -99,3 +103,48 @@ def test_topk_router_gates_normalized():
     logits = jax.random.normal(jax.random.key(9), (200, 32))
     g, _, _ = topk_router(logits, 4, interpret=True)
     np.testing.assert_allclose(np.asarray(g).sum(-1), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("t,e,k,r", [(64, 8, 2, 2), (300, 16, 4, 8)])
+def test_topk_router_replicated_matches_ref(t, e, k, r):
+    """Replica-aware routing: slots follow ExpertPlacement.dispatch_slots'
+    round-robin rule and capacity positions count per physical slot, carried
+    across token blocks."""
+    from repro.core.placement import gimbal_placement_rep
+    from repro.models.moe import ExpertPlacement
+    rng = np.random.default_rng(t + e)
+    logits = jnp.asarray(rng.normal(size=(t, e)) * 2, jnp.float32)
+    A = rng.random((2, e)) + 0.1
+    W = rng.random((e, e))
+    np.fill_diagonal(W, 0.0)
+    inv = gimbal_placement_rep(A, W, g=2, redundancy=r, top_e=4)
+    plc = ExpertPlacement.from_slot_map(inv, e)
+    got = topk_router_replicated(logits, k, plc.replica_slots,
+                                 plc.replica_count, e + r, block_t=64,
+                                 interpret=True)
+    want = ref.ref_topk_router_replicated(logits, k, plc.replica_slots,
+                                          plc.replica_count, e + r)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-5, atol=1e-6)
+    for g_, w_ in zip(got[1:], want[1:]):
+        np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_))
+    # the kernel's slot choice IS the model's dispatch rule
+    np.testing.assert_array_equal(np.asarray(got[2]),
+                                  np.asarray(plc.dispatch_slots(got[1])))
+
+
+def test_topk_router_replicated_splits_hot_expert():
+    """All tokens picking one replicated expert spread evenly over its
+    copies, halving the per-slot capacity pressure."""
+    from repro.models.moe import ExpertPlacement
+    t, e = 128, 4
+    logits = jnp.zeros((t, e)).at[:, 1].set(10.0)     # everyone -> expert 1
+    inv = np.array([0, 1, 2, 1, 3, 2], np.int32)      # expert 1 in slots 1+3
+    plc = ExpertPlacement.from_slot_map(inv, e)
+    _, ids, slots, pos = topk_router_replicated(
+        logits, 1, plc.replica_slots, plc.replica_count, 6, block_t=32,
+        interpret=True)
+    assert (np.asarray(ids) == 1).all()
+    s = np.asarray(slots).reshape(-1)
+    assert set(s) == {1, 3} and (s == 1).sum() == (s == 3).sum() == t // 2
+    assert np.asarray(pos).max() == t // 2 - 1        # per-slot counters

@@ -10,6 +10,10 @@ from repro.models import moe as moe_lib
 from repro.models.attention import _sdpa, _sdpa_chunked, _causal_mask
 from repro.models.config import ModelConfig
 
+# compile-heavy (jits real JAX models / Pallas kernels on CPU): runs in
+# the full CI job; the PR lane runs `-m 'not slow'` (see README)
+pytestmark = pytest.mark.slow
+
 
 def tiny(family="dense", **kw):
     base = dict(name="t", family=family, num_layers=3, d_model=64, num_heads=4,
@@ -69,6 +73,31 @@ def test_moe_placement_invariance():
     moved = moe_lib.permute_expert_weights(params, ident, new)
     y1, _ = moe_lib.moe_apply(moved, cfg, x, new)
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-5, atol=1e-5)
+
+
+def test_moe_replicated_placement_invariance():
+    """Replicating hot experts (E -> E+R slots, duplicated weights, round-
+    robin load-splitting dispatch) must not change outputs in either dispatch
+    mode — the correctness contract of the replicated expert level."""
+    cfg = tiny(family="moe", **MOE_KW)
+    params = moe_lib.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model), jnp.float32)
+    ident = moe_lib.ExpertPlacement.identity(cfg.num_experts)
+    y0, _ = moe_lib.moe_apply(params, cfg, x, ident)
+
+    from repro.core.placement import eplb_placement_rep
+    rng = np.random.default_rng(4)
+    A = rng.random((2, cfg.num_experts)) + 0.1
+    A[:, 1] *= 10.0
+    inv = eplb_placement_rep(A, g=2, redundancy=2)
+    new = moe_lib.ExpertPlacement.from_slot_map(inv, cfg.num_experts)
+    assert int(new.replica_count.max()) >= 2          # something replicated
+    moved = moe_lib.permute_expert_weights(params, ident, new)
+    moved = dict(params, **moved)
+    for mode in ("dense", "gather"):
+        y1, _ = moe_lib.moe_apply(moved, cfg, x, new, dispatch_mode=mode)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_dispatch_modes_equivalent():

@@ -4,6 +4,7 @@ must be bit-compatible (up to fp tolerance) with the paper-faithful baseline.
 Multi-device cases run in a subprocess with XLA_FLAGS-forced host devices
 (jax locks the device count at first init, so the main pytest process stays
 single-device)."""
+
 import subprocess
 import sys
 import textwrap
@@ -11,6 +12,11 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# compile-heavy (jits real JAX models / Pallas kernels on CPU): runs in
+# the full CI job; the PR lane runs `-m 'not slow'` (see README)
+pytestmark = pytest.mark.slow
 
 from repro.distributed.context import ShardCtx, shard_ctx
 from repro.models import model as M

@@ -4,8 +4,13 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.placement import (assignment_to_perm, comm_cut, eplb_placement,
-                                  gimbal_placement, migration_cost, milp_exact,
-                                  objective, perm_to_assignment, row_imbalance,
+                                  eplb_placement_rep, gimbal_placement,
+                                  gimbal_placement_rep, migration_cost,
+                                  milp_exact, objective, perm_to_assignment,
+                                  perm_to_slot_map, rep_comm_cut,
+                                  rep_device_fractions, rep_migration_cost,
+                                  rep_row_imbalance, replica_counts,
+                                  row_imbalance, slot_devices,
                                   static_placement)
 
 
@@ -165,6 +170,82 @@ def test_milp_exact_finds_obvious_optimum():
 def test_milp_rejects_large_instances():
     with pytest.raises(ValueError):
         milp_exact(np.ones((1, 20)), np.zeros((20, 20)), 2)
+
+
+# --- replicated placements (slot maps over S = E + R slots) ---------------------
+
+@given(st.integers(0, 10**6), st.integers(2, 4), st.integers(2, 6),
+       st.integers(0, 2))
+@settings(max_examples=50, deadline=None)
+def test_rep_solvers_valid_slot_maps(seed, g, per, rep_per_dev):
+    """Both replica-aware solvers emit valid slot maps: every expert holds
+    >= 1 slot, exactly S/g slots per device, and exactly R redundant slots."""
+    m = g * per
+    r = g * rep_per_dev                       # keeps E+R divisible by g
+    rng = np.random.default_rng(seed)
+    A, W = rand_instance(rng, m=m, g=g)
+    for inv in (eplb_placement_rep(A, g, r),
+                gimbal_placement_rep(A, W, g, r, top_e=4)):
+        assert len(inv) == m + r
+        counts = np.bincount(inv, minlength=m)
+        assert (counts >= 1).all() and counts.sum() == m + r
+        dev = slot_devices(m + r, g)
+        assert (np.bincount(dev) == (m + r) // g).all()
+
+
+@given(st.integers(0, 10**6), st.integers(2, 4), st.integers(2, 6))
+@settings(max_examples=50, deadline=None)
+def test_rep_helpers_reduce_to_perm_versions(seed, g, per):
+    """At R=0 the slot-map objective helpers equal the permutation ones."""
+    m = g * per
+    rng = np.random.default_rng(seed)
+    A, W = rand_instance(rng, m=m, g=g)
+    perm = gimbal_placement(A, W, g, top_e=4)
+    inv = perm_to_slot_map(perm)
+    assign = perm_to_assignment(perm, g)
+    assert np.isclose(rep_row_imbalance(A, inv, g), row_imbalance(A, assign, g))
+    assert np.isclose(rep_comm_cut(W, inv, g), comm_cut(W, assign))
+    frac = rep_device_fractions(inv, m, g)
+    np.testing.assert_allclose(frac.sum(1), 1.0)
+
+
+def test_replica_counts_water_filling():
+    """Redundant slots go to the heaviest per-replica load."""
+    tot = np.array([100.0, 10.0, 1.0, 1.0])
+    counts = replica_counts(tot, 7)           # 3 extra slots
+    assert (counts == [4, 1, 1, 1]).all()     # 100/4 = 25 still > 10
+    # 40 -> 20/copy, then 30 -> 15/copy, then 20 is heaviest again
+    counts = replica_counts(np.array([40.0, 30.0, 1.0, 1.0]), 7)
+    assert (counts == [3, 2, 1, 1]).all()
+
+
+def test_replication_lowers_hot_imbalance():
+    """One dominating expert: splitting it across devices must strictly
+    reduce the per-device load imbalance vs any unreplicated placement."""
+    rng = np.random.default_rng(3)
+    A = rng.random((2, 8)) + 0.1
+    A[:, 2] *= 50.0                           # severe hotspot
+    W = rng.random((8, 8)) * 0.01
+    np.fill_diagonal(W, 0.0)
+    base = rep_row_imbalance(A, perm_to_slot_map(eplb_placement(A, 2)), 2)
+    rep = rep_row_imbalance(A, eplb_placement_rep(A, 2, 2), 2)
+    assert rep < base
+    # and the hot expert actually got the replicas, on distinct devices
+    inv = eplb_placement_rep(A, 2, 2)
+    dev = slot_devices(len(inv), 2)
+    assert (inv == 2).sum() >= 2
+    assert len(set(dev[inv == 2])) == 2
+
+
+def test_rep_migration_cost_counts_new_copies():
+    inv0 = perm_to_slot_map(static_placement(8, 2))   # identity, devices 0/1
+    # S=10: replicate experts 0 and 1 onto device 1, shift expert 4 to dev 0
+    inv1 = np.array([0, 1, 2, 3, 4, 0, 1, 5, 6, 7], np.int32)
+    moved, nbytes = rep_migration_cost(inv0, inv1, 2, 100)
+    # device 0 now holds {0,1,2,3,4} (had {0,1,2,3}): +4
+    # device 1 now holds {0,1,5,6,7} (had {4,5,6,7}): +0,+1
+    assert moved == 3 and nbytes == 300
+    assert rep_migration_cost(inv1, inv1, 2, 100) == (0, 0)
 
 
 # --- migration accounting -------------------------------------------------------

@@ -19,6 +19,10 @@ from repro.sim.simulator import simulate
 from repro.workloads.burstgpt import burstgpt_trace
 from repro.workloads.sharegpt import sharegpt_trace
 
+# compile-heavy (jits real JAX models / Pallas kernels on CPU): runs in
+# the full CI job; the PR lane runs `-m 'not slow'` (see README)
+pytestmark = pytest.mark.slow
+
 
 def req(rid, plen=8, t=0.0, cls="batch", gen=0, out=4, preempted=0):
     r = Request(req_id=rid, prompt_len=plen, max_new_tokens=out,

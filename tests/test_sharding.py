@@ -13,6 +13,10 @@ from repro.launch.steps import placements_input
 from repro.models import model as M
 from repro.models.config import SHAPE_CELLS
 
+# compile-heavy (jits real JAX models / Pallas kernels on CPU): runs in
+# the full CI job; the PR lane runs `-m 'not slow'` (see README)
+pytestmark = pytest.mark.slow
+
 
 def _abstract_mesh(sizes, names):
     """AbstractMesh across jax versions: newer releases take (sizes, names),

@@ -114,6 +114,44 @@ def test_simulator_edr_reduces_cut():
     assert e.cross_frac_final <= s.cross_frac_final
 
 
+def test_eplb_variant_first_class():
+    """The count-only EPLB baseline runs end to end through the variant
+    registry (it used to raise in variant_flags/make_router/make_queue)."""
+    from repro.core.gimbal import (VARIANTS, make_queue, make_rebalancer,
+                                   make_router, variant_flags)
+    assert "eplb" in VARIANTS
+    f = variant_flags("eplb")
+    assert f["edr"] and not f["sjf"] and not f["dplb"] and not f["rep"]
+    assert make_queue("eplb").policy == "fcfs"
+    make_router("eplb", [0, 1])
+    rb = make_rebalancer("eplb", get_config("qwen3-30b-a3b"), 2)
+    assert rb.policy == "eplb" and rb.redundancy == 0
+    trace = burstgpt_trace(n=60, rps=4.0, seed=0)
+    from repro.core.types import GimbalConfig
+    res = simulate(trace, "eplb", get_config("qwen3-30b-a3b"), n_engines=2,
+                   gcfg=GimbalConfig(tau=200))
+    assert res.report.n == 60 and res.migrations >= 1
+
+
+def test_gimbal_rep_lowers_hotspot_multiplier():
+    """Under hot-expert skew, replicating the hottest experts must lower the
+    hotspot multiplier vs plain gimbal (the acceptance-criterion direction),
+    and the trajectory records the drop."""
+    from repro.core.types import GimbalConfig
+    cfg = get_config("qwen3-30b-a3b")
+    trace = burstgpt_trace(n=60, rps=6.0, seed=1)
+    g = simulate([copy.copy(r) for r in trace], "gimbal", cfg, n_engines=2,
+                 gcfg=GimbalConfig(tau=200), hot_boost=32.0)
+    rep = simulate([copy.copy(r) for r in trace], "gimbal+rep", cfg,
+                   n_engines=2, gcfg=GimbalConfig(tau=200, redundancy=16),
+                   hot_boost=32.0)
+    assert rep.moe_mult_final < g.moe_mult_final
+    # trajectory recorded: initial static-placement point + every rebalance,
+    # ending at the reported final multiplier
+    assert len(rep.moe_mult_trajectory) >= 2
+    assert rep.moe_mult_trajectory[-1][1] == rep.moe_mult_final
+
+
 def test_simulator_dense_arch_has_no_expert_effects():
     trace = burstgpt_trace(n=60, rps=4.0, seed=0)
     res = simulate([copy.copy(r) for r in trace], "gimbal",

@@ -14,6 +14,10 @@ from repro.training.data import DataConfig, TokenStream, pack_documents
 from repro.training.optimizer import (AdamWConfig, adamw_update,
                                       init_adamw, lr_schedule)
 
+# compile-heavy (jits real JAX models / Pallas kernels on CPU): runs in
+# the full CI job; the PR lane runs `-m 'not slow'` (see README)
+pytestmark = pytest.mark.slow
+
 
 # --- optimizer -----------------------------------------------------------------
 
