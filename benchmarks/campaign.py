@@ -22,9 +22,14 @@ Replaces the ad-hoc sequential sweep that used to live in benchmarks/run.py:
 
 Workload axis syntax: ``mix:<suite>`` is a multi-tenant SLO-labeled mix from
 ``repro.workloads.tenants.SUITES``; ``bgpt:<dist>`` is the paper's original
-single-tenant BurstGPT shape (Fig. 5) with no SLOs — the control cells.
+single-tenant BurstGPT shape (Fig. 5) with no SLOs — the control cells;
+``sess:<suite>`` is the same tenant mix with per-user growing session
+transcripts (real shared prefixes), the sticky workload the engine-level
+dispatch axis is measured on.
 Variant axis: the paper's five ablations plus ``gimbal_p`` (gimbal with
-preemptive priority scheduling, the beyond-paper mixed-tenant mode).
+preemptive priority scheduling, the beyond-paper mixed-tenant mode) and the
+engine-level dispatch ladder ``rr``/``prefix``/``kv``/``sticky``/``combined``
+(core/dispatch.py; SJF + EDR held fixed, only the dispatch rule varies).
 """
 from __future__ import annotations
 
@@ -47,15 +52,25 @@ DOCS = Path(__file__).resolve().parent.parent / "docs"
 # (SchedulerCore schema 2 + SLO-goodput accounting); 2 = arrival draws moved
 # to a spawned generator so lengths are paired across the arrival axis;
 # 3 = expert_skew axis + replicated expert level (eplb / gimbal+rep variants,
-# hotspot-multiplier trajectory).
-CAMPAIGN_SCHEMA = 3
+# hotspot-multiplier trajectory); 4 = engine-level dispatch (DispatchCore
+# assignment path, rr/prefix/kv/sticky/combined variants, sess: session
+# workloads, prefix-hit columns).
+CAMPAIGN_SCHEMA = 4
 
 MODEL = "qwen3-30b-a3b"
 N_ENGINES = 2
 KV_POOL = 60_000
 MMPP_BURSTINESS = 4.0           # benchmarks/common.py calibration
 CAMPAIGN_VARIANTS = ("vllm", "dplb", "sjfs", "edr", "eplb", "gimbal",
-                     "gimbal+rep", "gimbal_p")
+                     "gimbal+rep", "gimbal_p",
+                     "rr", "prefix", "kv", "sticky", "combined")
+# vocabulary for sess:<suite> session-transcript token draws (the value only
+# shapes block-hash identity, not cost-model time) and the transcript cap:
+# 4k contexts keep session prompts in the same length regime as the Fig. 5
+# mixes at the calibrated RPS grid, so prefix reuse vs recompute actually
+# moves TTFT/goodput rather than vanishing into idle headroom
+SESSION_VOCAB = 50_000
+SESSION_MAX_CONTEXT = 4096
 # expert_skew axis: how hot the synthetic expert prior's hot experts run
 # ("base" = the paper's Fig. 3 shape; "hot" stresses replication) and the
 # replica-slot count the "gimbal+rep" variant deploys (E=128 + 16 replicas)
@@ -107,6 +122,7 @@ MATRICES: Dict[str, Matrix] = {
         variants=CAMPAIGN_VARIANTS,
         workloads=("mix:chat_vs_batch", "mix:agents_vs_eval",
                    "mix:three_tier", "mix:uniform",
+                   "sess:chat_vs_batch", "sess:three_tier",
                    "bgpt:random", "bgpt:central", "bgpt:descending",
                    "bgpt:two-end", "bgpt:average"),
         arrivals=("poisson", "mmpp", "gamma", "diurnal", "flash"),
@@ -119,19 +135,22 @@ MATRICES: Dict[str, Matrix] = {
     # headline BENCH_campaign.json
     "quick": Matrix(
         name="quick",
-        variants=("vllm", "sjfs", "eplb", "gimbal", "gimbal+rep", "gimbal_p"),
-        workloads=("mix:chat_vs_batch", "mix:three_tier", "bgpt:random"),
+        variants=("vllm", "sjfs", "eplb", "gimbal", "gimbal+rep", "gimbal_p",
+                  "rr", "combined"),
+        workloads=("mix:chat_vs_batch", "mix:three_tier", "bgpt:random",
+                   "sess:chat_vs_batch"),
         arrivals=("poisson", "mmpp", "flash"),
         rps=(8.57, 10.0),
         seeds=(0, 1),
         n_requests=200,
         expert_skew=("base", "hot")),
-    # CI-sized: exercises every moving part (mix + bgpt workloads, two
-    # arrival processes, preemptive variant, resume path) in seconds
+    # CI-sized: exercises every moving part (mix + bgpt + session workloads,
+    # two arrival processes, preemptive + scored-dispatch variants, resume
+    # path) in seconds
     "smoke": Matrix(
         name="smoke",
-        variants=("vllm", "gimbal_p", "gimbal+rep"),
-        workloads=("mix:chat_vs_batch", "bgpt:random"),
+        variants=("vllm", "gimbal_p", "gimbal+rep", "combined"),
+        workloads=("mix:chat_vs_batch", "bgpt:random", "sess:chat_vs_batch"),
         arrivals=("mmpp", "flash"),
         rps=(10.0,),
         seeds=(0,),
@@ -155,15 +174,19 @@ MATRICES: Dict[str, Matrix] = {
 def build_trace(workload: str, arrival: str, rps: float, seed: int, n: int):
     from repro.workloads import burstgpt_trace, suite_trace
     kind, _, name = workload.partition(":")
-    if kind == "mix":
+    if kind in ("mix", "sess"):
         kw = {"burstiness": MMPP_BURSTINESS} if arrival == "mmpp" else {}
+        if kind == "sess":      # per-user session transcripts: real prefixes
+            kw.update(sessions=True, vocab_size=SESSION_VOCAB,
+                      max_context=SESSION_MAX_CONTEXT)
         return suite_trace(name, n=n, arrival=arrival, rps=rps, seed=seed,
                            **kw)
     if kind == "bgpt":
         return burstgpt_trace(n=n, distribution=name, rps=rps, seed=seed,
                               burstiness=MMPP_BURSTINESS, arrival=arrival)
     raise ValueError(f"unknown workload {workload!r} "
-                     "(expected 'mix:<suite>' or 'bgpt:<dist>')")
+                     "(expected 'mix:<suite>', 'sess:<suite>' or "
+                     "'bgpt:<dist>')")
 
 
 def _report_cols(rep) -> Dict[str, float]:
@@ -198,6 +221,9 @@ def run_cell(cell: Dict) -> Dict:
     row = dict(cell)
     row.update(_report_cols(res.report))
     row["preemptions"] = res.preemptions
+    row["prefix_hits"] = res.prefix_hits
+    row["prefix_probed"] = res.prefix_probed
+    row["prefix_hit_rate"] = res.prefix_hit_rate
     row["migrations"] = res.migrations
     row["moe_mult"] = res.moe_mult_final
     row["cross_frac"] = res.cross_frac_final
@@ -301,7 +327,8 @@ def render_report(rows: List[Dict], matrix: Matrix) -> str:
             lines.append(f"### Arrival process `{a}`")
             lines.append("")
             hdr = (["variant", "skew", "rps", "mean TTFT", "p99 TTFT",
-                    "mean TPOT", "goodput tok/s", "SLO attain", "moe mult"]
+                    "mean TPOT", "goodput tok/s", "SLO attain", "prefix hit",
+                    "moe mult"]
                    + [f"attain:{c}" for c in classes])
             lines.append("| " + " | ".join(hdr) + " |")
             lines.append("|" + "---|" * len(hdr))
@@ -327,6 +354,7 @@ def render_report(rows: List[Dict], matrix: Matrix) -> str:
                              _fmt(_mean_over_seeds(sel, "mean_tpot")),
                              _fmt(_mean_over_seeds(sel, "goodput_tok_s")),
                              _fmt(_mean_over_seeds(sel, "slo_attainment")),
+                             _fmt(_mean_over_seeds(sel, "prefix_hit_rate")),
                              _fmt(_mean_over_seeds(sel, "moe_mult"))]
                             + per_class) + " |")
             lines.append("")

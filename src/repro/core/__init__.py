@@ -16,10 +16,13 @@ from repro.core.placement import (assignment_to_perm, comm_cut, eplb_placement,
 from repro.core.eplb import (ClusterExpertLevel, ExpertRebalancer,
                              NullExpertLevel, RebalanceEvent,
                              SyntheticExpertLevel)
-from repro.core.gimbal import (VARIANTS, make_queue, make_rebalancer,
-                               make_router, make_sim_expert_level,
-                               variant_flags)
-from repro.core.prefix_cache import PrefixCache
+from repro.core.gimbal import (DISPATCH_VARIANTS, VARIANTS, make_queue,
+                               make_rebalancer, make_router,
+                               make_sim_expert_level, variant_flags)
+from repro.core.dispatch import (DISPATCH_WEIGHTS, DispatchCore,
+                                 DispatchWeights, ScoredRouter)
+from repro.core.prefix_cache import PrefixCache, block_hashes
+from repro.core.prefix_directory import PrefixDirectory
 from repro.core.scheduler import (Backend, RunningSeq, SchedEvent,
                                   SchedulerCore)
 
@@ -36,8 +39,9 @@ __all__ = [
     "rep_row_imbalance", "row_imbalance", "static_placement",
     "ClusterExpertLevel", "ExpertRebalancer", "NullExpertLevel",
     "RebalanceEvent", "SyntheticExpertLevel",
-    "VARIANTS", "make_queue", "make_rebalancer", "make_router",
-    "make_sim_expert_level", "variant_flags",
-    "PrefixCache",
+    "DISPATCH_VARIANTS", "VARIANTS", "make_queue", "make_rebalancer",
+    "make_router", "make_sim_expert_level", "variant_flags",
+    "DISPATCH_WEIGHTS", "DispatchCore", "DispatchWeights", "ScoredRouter",
+    "PrefixCache", "block_hashes", "PrefixDirectory",
     "Backend", "RunningSeq", "SchedEvent", "SchedulerCore",
 ]

@@ -12,19 +12,33 @@ beyond-paper baselines.
   * "gimbal+rep" — gimbal with hot-expert replication: R redundant expert
                    slots (GimbalConfig.redundancy; default one per device)
                    holding replicas of the hottest experts
+
+Engine-level dispatch variants (core/dispatch.py) hold the request level
+(SJF) and expert level (EDR) fixed and vary ONLY the dispatch rule, so a
+campaign sweep over them isolates the engine layer:
+
+  * "rr"         — round-robin dispatch (the dispatch-ablation baseline)
+  * "prefix"     — score on longest directory-held prefix only
+  * "kv"         — score on KV headroom only
+  * "sticky"     — score on user-affinity only
+  * "combined"   — all dispatch signals, weighted (DISPATCH_WEIGHTS)
 """
 from __future__ import annotations
 
 from typing import Dict, Optional, Sequence
 
+from repro.core.dispatch import DISPATCH_WEIGHTS, ScoredRouter
 from repro.core.eplb import (ClusterExpertLevel, ExpertRebalancer,
                              NullExpertLevel, SyntheticExpertLevel)
+from repro.core.prefix_directory import PrefixDirectory
 from repro.core.router import GimbalRouter, RoundRobinRouter
 from repro.core.sjf import SJFQueue
 from repro.core.types import GimbalConfig
 from repro.models.config import ModelConfig
 
-VARIANTS = ("vllm", "dplb", "sjfs", "edr", "eplb", "gimbal", "gimbal+rep")
+DISPATCH_VARIANTS = ("rr", "prefix", "kv", "sticky", "combined")
+VARIANTS = ("vllm", "dplb", "sjfs", "edr", "eplb", "gimbal",
+            "gimbal+rep") + DISPATCH_VARIANTS
 
 
 def variant_flags(variant: str) -> Dict[str, bool]:
@@ -32,15 +46,25 @@ def variant_flags(variant: str) -> Dict[str, bool]:
         raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
     return {
         "dplb": variant in ("dplb", "gimbal", "gimbal+rep"),
-        "sjf": variant in ("sjfs", "gimbal", "gimbal+rep"),
-        "edr": variant in ("edr", "eplb", "gimbal", "gimbal+rep"),
+        "sjf": variant in ("sjfs", "gimbal", "gimbal+rep")
+               or variant in DISPATCH_VARIANTS,
+        "edr": variant in ("edr", "eplb", "gimbal", "gimbal+rep")
+               or variant in DISPATCH_VARIANTS,
         "rep": variant == "gimbal+rep",
+        # scored engine-level dispatch ("rr" keeps SJF+EDR but routes blind,
+        # making it the clean baseline for the dispatch axis)
+        "dispatch": variant in DISPATCH_VARIANTS and variant != "rr",
     }
 
 
 def make_router(variant: str, engine_ids: Sequence[int],
-                cfg: Optional[GimbalConfig] = None):
+                cfg: Optional[GimbalConfig] = None,
+                directory: Optional[PrefixDirectory] = None):
     f = variant_flags(variant)
+    if f["dispatch"]:
+        return ScoredRouter(engine_ids, cfg or GimbalConfig(),
+                            directory=directory,
+                            weights=DISPATCH_WEIGHTS[variant])
     cls = GimbalRouter if f["dplb"] else RoundRobinRouter
     return cls(engine_ids, cfg or GimbalConfig())
 

@@ -11,7 +11,23 @@ user's next request to the engine whose table already holds their prefix.
 from __future__ import annotations
 
 import collections
-from typing import List, Sequence
+from typing import Callable, List, Optional, Sequence
+
+
+def block_hashes(tokens: Sequence[int], block_size: int = 16) -> List[int]:
+    """Chained hashes of the full leading blocks of ``tokens``: block b's hash
+    folds in block b-1's, so equal hashes imply equal whole prefixes.  Shared
+    by the per-engine ``PrefixCache`` and the cluster-wide
+    ``PrefixDirectory`` (core/prefix_directory.py) so both speak the same
+    block identity."""
+    hashes = []
+    parent = 0
+    n_full = len(tokens) // block_size
+    for b in range(n_full):
+        blk = tuple(tokens[b * block_size:(b + 1) * block_size])
+        parent = hash((parent, blk))
+        hashes.append(parent)
+    return hashes
 
 
 class PrefixCache:
@@ -22,16 +38,13 @@ class PrefixCache:
         # global counters (paper §V-A.5 metrics)
         self.hit_blocks = 0
         self.probed_blocks = 0
+        # content listeners (the cluster-wide PrefixDirectory subscribes):
+        # fired with the block hash when a NEW block lands / a block leaves
+        self.on_insert: Optional[Callable[[int], None]] = None
+        self.on_evict: Optional[Callable[[int], None]] = None
 
     def _block_hashes(self, tokens: Sequence[int]) -> List[int]:
-        hashes = []
-        parent = 0
-        n_full = len(tokens) // self.block_size
-        for b in range(n_full):
-            blk = tuple(tokens[b * self.block_size:(b + 1) * self.block_size])
-            parent = hash((parent, blk))
-            hashes.append(parent)
-        return hashes
+        return block_hashes(tokens, self.block_size)
 
     def match(self, tokens: Sequence[int], now: float = 0.0) -> int:
         """Number of leading tokens already cached (block-granular).
@@ -57,9 +70,28 @@ class PrefixCache:
         for h in self._block_hashes(tokens):
             if h in self._table:
                 self._table.move_to_end(h)
+                self._table[h] = now
+                continue
             self._table[h] = now
+            if self.on_insert is not None:
+                self.on_insert(h)
             while len(self._table) > self.capacity:
-                self._table.popitem(last=False)  # LRU eviction
+                ev, _ = self._table.popitem(last=False)  # LRU eviction
+                if self.on_evict is not None:
+                    self.on_evict(ev)
+
+    def clear(self) -> None:
+        """Drop every resident block (engine failure: node memory is gone).
+        Fires ``on_evict`` per block so any subscribed directory stays
+        consistent by construction; counters are kept (they are cluster-wide
+        telemetry, not node state)."""
+        while self._table:
+            ev, _ = self._table.popitem(last=False)
+            if self.on_evict is not None:
+                self.on_evict(ev)
+
+    def __len__(self) -> int:
+        return len(self._table)
 
     @property
     def hit_rate(self) -> float:

@@ -1,0 +1,96 @@
+"""Cluster-wide prefix directory: which engine holds which cached blocks.
+
+The engine-level dispatch layer (paper §IV-B) scores candidate engines by the
+longest prefix of the incoming prompt they already hold in their local
+``PrefixCache``.  A per-engine cache only answers "do *I* hold this block";
+the ``PrefixDirectory`` is the fleet-level view the router consults — a
+per-engine set of resident block hashes kept consistent with the real caches
+by subscription, not by polling:
+
+* ``attach(engine_id, cache)`` hooks the cache's ``on_insert``/``on_evict``
+  callbacks, so every block that lands in or falls out of an engine's cache
+  (LRU eviction, ``clear()`` on failure) updates the directory immediately.
+* ``purge_engine`` drops an engine's whole entry — engine failure loses the
+  node's memory, so its advertised prefixes must vanish before the next
+  dispatch (orphans must not chase a dead engine's stale prefix).
+* A hedged move needs no special case: re-submitting the request on the
+  target engine inserts its blocks into the target's cache, which advertises
+  them here before the next ``submit`` consults the directory.
+
+Block identity is the chained hash of ``core/prefix_cache.py`` — equal hash
+implies equal whole prefix — so ``longest_prefix`` can count the leading
+matched run per engine exactly like a local cache probe would.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Set, Tuple
+
+from repro.core.prefix_cache import PrefixCache, block_hashes
+
+
+class PrefixDirectory:
+    def __init__(self, block_size: int = 16):
+        self.block_size = block_size
+        self._held: Dict[int, Set[int]] = {}
+
+    # --- feeding the directory ---------------------------------------------
+
+    def attach(self, engine_id: int, cache: PrefixCache) -> None:
+        """Subscribe to an engine's PrefixCache so inserts/evictions flow in.
+
+        The cache must hash with the directory's block size — otherwise the
+        two planes would disagree on block identity."""
+        if cache.block_size != self.block_size:
+            raise ValueError(
+                f"engine {engine_id} cache block_size {cache.block_size} != "
+                f"directory block_size {self.block_size}")
+        self._held.setdefault(engine_id, set())
+        cache.on_insert = lambda h, e=engine_id: \
+            self._held.setdefault(e, set()).add(h)
+        cache.on_evict = lambda h, e=engine_id: \
+            self._held.get(e, set()).discard(h)
+
+    def record(self, engine_id: int, tokens: Sequence[int]) -> None:
+        """Directly advertise a prompt's blocks for an engine (tests and
+        cache-less planes; attached engines feed automatically)."""
+        self._held.setdefault(engine_id, set()).update(
+            block_hashes(tokens, self.block_size))
+
+    # --- invalidation -------------------------------------------------------
+
+    def purge_engine(self, engine_id: int) -> None:
+        """Engine failure: all its advertised prefixes are gone."""
+        held = self._held.get(engine_id)
+        if held is not None:
+            held.clear()
+
+    # --- queries ------------------------------------------------------------
+
+    def blocks_held(self, engine_id: int) -> int:
+        return len(self._held.get(engine_id, ()))
+
+    def longest_prefix(self, tokens: Sequence[int]) -> Dict[int, int]:
+        """Tokens of ``tokens``'s leading run each engine holds (prefix
+        property: the count stops at an engine's first missing block).
+        Engines holding nothing are omitted."""
+        hashes = block_hashes(tokens, self.block_size)
+        out: Dict[int, int] = {}
+        for eid, held in self._held.items():
+            matched = 0
+            for h in hashes:
+                if h in held:
+                    matched += 1
+                else:
+                    break
+            if matched:
+                out[eid] = matched * self.block_size
+        return out
+
+    def best_engine(self, tokens: Sequence[int]) -> Optional[Tuple[int, int]]:
+        """(engine_id, matched_tokens) for the longest held prefix, lowest
+        engine id on ties; None when no engine holds any block."""
+        held = self.longest_prefix(tokens)
+        if not held:
+            return None
+        best = min(held, key=lambda e: (-held[e], e))
+        return best, held[best]

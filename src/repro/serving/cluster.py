@@ -14,9 +14,9 @@ Fault tolerance / elasticity (beyond-paper, required at 1000+ node scale):
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
-from repro.core.gimbal import make_router
+from repro.core.dispatch import DispatchCore
 from repro.core.slo import SLOTracker
 from repro.core.types import GimbalConfig, Request
 from repro.serving.engine import Engine
@@ -27,16 +27,24 @@ from repro.serving.metrics import (MetricsBus, summarize, summarize_by_class,
 class Cluster:
     def __init__(self, engines: Sequence[Engine], variant: str = "gimbal",
                  gimbal_cfg: Optional[GimbalConfig] = None, bus_delay: float = 0.05,
-                 expert_level=None):
+                 expert_level=None, dispatch_core: Optional[DispatchCore] = None):
         """``expert_level``: the ONE ClusterExpertLevel every engine was built
         with (core/gimbal.make_cluster_expert_level) — the cluster owns the
         cluster-wide expert telemetry and exposes its RebalanceEvent stream /
         coupling factors via ``expert_report()``.  When omitted, falls back
         to the first engine's level (which is only cluster-wide if the caller
-        shared it across engines)."""
+        shared it across engines).
+
+        ``dispatch_core``: the engine-level dispatch state machine (router +
+        cluster-wide PrefixDirectory + assignment log).  Built from
+        ``variant`` when omitted; pass one in to share or inspect it."""
         self.gcfg = gimbal_cfg or GimbalConfig()
         self.engines: Dict[int, Engine] = {e.engine_id: e for e in engines}
-        self.router = make_router(variant, list(self.engines), self.gcfg)
+        self.dispatch = dispatch_core or DispatchCore(
+            variant, list(self.engines), self.gcfg)
+        for e in engines:
+            self.dispatch.attach_engine(e.engine_id, getattr(e, "prefix", None))
+        self.router = self.dispatch.router
         self.bus = MetricsBus(delay=bus_delay)
         self.finished: List[Request] = []
         self.variant = variant
@@ -46,8 +54,7 @@ class Cluster:
     # ------------------------------------------------------------------ dispatch
     def submit(self, r: Request, now: float) -> int:
         metrics = self.bus.snapshot(now)
-        eid = self.router.select(r, metrics, now)
-        r.engine_id = eid
+        eid = self.dispatch.dispatch(r, metrics, now)
         self.engines[eid].submit(r, now)
         return eid
 
@@ -64,13 +71,23 @@ class Cluster:
         return done
 
     def run_until_drained(self, t0: float = 0.0, dt: float = 0.01,
-                          max_steps: int = 100_000) -> List[Request]:
+                          max_steps: int = 100_000,
+                          on_step: Optional[Callable[["Cluster", float], None]]
+                          = None) -> List[Request]:
+        """Step until EVERY engine — healthy or not — is empty.  Unhealthy
+        engines' queues count: requests stranded on a failed-then-restored
+        engine must not be silently dropped from the finished set (they only
+        stop counting once ``fail_engine`` has drained and re-routed them).
+        ``on_step(cluster, now)`` runs after each step — fault-injection
+        drills (restore an engine mid-drain) hook in here."""
         now = t0
         for _ in range(max_steps):
             self.step(now)
+            if on_step is not None:
+                on_step(self, now)
             now += dt
             if all(e.num_active() == 0 and len(e.queue) == 0
-                   for e in self.engines.values() if e.healthy):
+                   for e in self.engines.values()):
                 break
         return self.finished
 
@@ -97,6 +114,10 @@ class Cluster:
             r.hedged_at = now
             r.hedges += 1
             e.core.hedged_away += 1
+            # the move is an assignment decision (parity oracle); re-submit
+            # on the target advertises the prompt's blocks in the directory
+            # before the next dispatch consults it
+            self.dispatch.record_hedge(r, tgt)
             self.engines[tgt].submit(r, now)
 
     # ------------------------------------------------------------------ fault tolerance
@@ -105,7 +126,10 @@ class Cluster:
         number of re-routed requests."""
         e = self.engines[engine_id]
         e.healthy = False
-        self.router.remove_engine(engine_id)
+        # stop routing there and forget its prefixes (node memory is gone)
+        # BEFORE re-routing orphans, so none chase the dead engine's cache
+        self.dispatch.on_engine_failed(engine_id)
+        e.prefix.clear()
         orphans = e.drain_all()
         for r in orphans:
             self.submit(r, now)
@@ -113,11 +137,12 @@ class Cluster:
 
     def restore_engine(self, engine_id: int) -> None:
         self.engines[engine_id].healthy = True
-        self.router.add_engine(engine_id)
+        self.dispatch.on_engine_restored(engine_id)
 
     def add_engine(self, engine: Engine) -> None:
         self.engines[engine.engine_id] = engine
-        self.router.add_engine(engine.engine_id)
+        self.dispatch.attach_engine(engine.engine_id,
+                                    getattr(engine, "prefix", None))
 
     # ------------------------------------------------------------------ reporting
     def report(self, horizon: Optional[float] = None):
@@ -158,6 +183,15 @@ class Cluster:
                     "bytes_moved": 0}
         return {"moe_mult": lvl.moe_mult, "cross_frac": lvl.cross_frac,
                 "migrations": lvl.migrations, "bytes_moved": lvl.bytes_moved}
+
+    def dispatch_stats(self) -> Dict[str, float]:
+        """Engine-level dispatch telemetry: assignment count and directory
+        occupancy per engine (the assignment stream itself is
+        ``self.dispatch.assignment_log()``)."""
+        d = self.dispatch
+        return {"assignments": len(d.assignments),
+                "directory_blocks": {eid: d.directory.blocks_held(eid)
+                                     for eid in self.engines}}
 
     def prefix_stats(self) -> Dict[str, float]:
         hits = sum(e.prefix.hit_blocks for e in self.engines.values())

@@ -28,7 +28,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.gimbal import make_router, make_sim_expert_level, variant_flags
+from repro.core.dispatch import DispatchCore
+from repro.core.gimbal import make_sim_expert_level, variant_flags
 from repro.core.prefix_cache import PrefixCache
 from repro.core.scheduler import SchedulerCore
 from repro.core.sjf import SJFQueue
@@ -74,6 +75,31 @@ class SimEngine:
         end, finished = self.core.step(now)
         return end - now, finished
 
+    # Cluster-compatible surface (serving/engine.py's shape): a Cluster can
+    # drive SimEngines directly, which is how the fast cluster regression
+    # tests run the real dispatch/fault path without JAX compiles.
+    def step(self, now: float) -> List[Request]:
+        _, finished = self.core.step(now)
+        return finished
+
+    def num_active(self) -> int:
+        return self.core.num_running()
+
+    def drain_all(self) -> List[Request]:
+        return self.core.drain()
+
+    @property
+    def queue(self) -> SJFQueue:
+        return self.core.queue
+
+    @property
+    def healthy(self) -> bool:
+        return self.core.healthy
+
+    @healthy.setter
+    def healthy(self, v: bool) -> None:
+        self.core.healthy = v
+
     @property
     def idle(self) -> bool:
         return self.core.idle
@@ -109,6 +135,9 @@ class SimResult:
     # per-(tenant, class) SLO counters merged across engine cores
     # (core/slo.py::SLOTracker.snapshot format)
     slo: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    # (req_id, engine_id) engine-assignment stream from the DispatchCore —
+    # the engine-level parity oracle (tests/test_scheduler_parity.py)
+    assignments: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -129,7 +158,9 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
     gcfg = gcfg or GimbalConfig()
     hwp = PROFILES[hw] if isinstance(hw, str) else hw
     flags = variant_flags(variant)
-    router = make_router(variant, list(range(n_engines)), gcfg)
+    # the same DispatchCore the serving Cluster drives: router + cluster-wide
+    # PrefixDirectory + engine-assignment log (the dispatch parity oracle)
+    dispatch = DispatchCore(variant, list(range(n_engines)), gcfg)
     bus = MetricsBus(delay=metric_delay)
     # ONE cluster-wide expert level shared by every engine core (§V-A.1)
     experts = make_sim_expert_level(variant, cfg, n_engines, gcfg, seed=seed,
@@ -140,6 +171,8 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
                          max_running=max_running,
                          kv_pool_tokens=kv_pool_tokens)
                for i in range(n_engines)]
+    for e in engines:
+        dispatch.attach_engine(e.engine_id, e.prefix)
     reqs = sorted(requests, key=lambda r: r.arrival_time)
 
     # event loop: arrivals interleaved with per-engine iterations
@@ -157,8 +190,8 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
         if t_next_arr <= t_next_eng:
             r = reqs[i_req]
             i_req += 1
-            eid = router.select(r, bus.snapshot(r.arrival_time), r.arrival_time)
-            r.engine_id = eid
+            eid = dispatch.dispatch(r, bus.snapshot(r.arrival_time),
+                                    r.arrival_time)
             engines[eid].submit(r, r.arrival_time)
             t_engine[eid] = max(t_engine[eid], r.arrival_time)
             continue
@@ -185,4 +218,4 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
         report_by_class=summarize_by_class(finished, horizon),
         preemptions=sum(e.preemptions for e in engines),
         report_by_tenant=summarize_by_tenant(finished, horizon),
-        slo=slo.snapshot())
+        slo=slo.snapshot(), assignments=dispatch.assignment_log())

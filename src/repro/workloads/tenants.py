@@ -42,8 +42,8 @@ class TenantSpec:
 
 def mixed_trace(specs: Tuple[TenantSpec, ...], n: int = 1000,
                 arrival: str = "mmpp", rps: float = 1.4, seed: int = 0,
-                vocab_size: Optional[int] = None,
-                **arrival_kw) -> List[Request]:
+                vocab_size: Optional[int] = None, sessions: bool = False,
+                max_context: int = 512, **arrival_kw) -> List[Request]:
     """One labeled multi-tenant trace: ``n`` requests at mean rate ``rps``
     under the named arrival process, each assigned a tenant by weighted
     draw and stamped with that tenant's class, SLO targets, and a user from
@@ -51,15 +51,30 @@ def mixed_trace(specs: Tuple[TenantSpec, ...], n: int = 1000,
 
     Label conservation: every request's ``tenant`` is one of the spec names
     and expected per-tenant counts follow the weights (tested in
-    tests/test_workload_matrix.py)."""
+    tests/test_workload_matrix.py).
+
+    ``sessions=True`` (requires ``vocab_size``) makes each user a growing
+    chat transcript, sharegpt-style: a user's next prompt is their previous
+    prompt plus a fresh suffix (the per-tenant length draw), capped at
+    ``max_context`` tokens prefix-stably (excess suffix is dropped, never
+    the head, so cached leading blocks stay valid).  This gives real
+    cross-request prefix locality — the signal prefix/sticky/combined
+    dispatch (core/dispatch.py) exploits and round-robin destroys.  Session
+    tokens come from a dedicated child generator, so (tenant, new-turn
+    lengths, users, arrivals) stay IDENTICAL to the token-less
+    (``vocab_size=None``) trace at the same seed: session cells compare
+    token locality, not a resampled workload."""
     if not specs:
         raise ValueError("mixed_trace needs at least one TenantSpec")
+    if sessions and not vocab_size:
+        raise ValueError("sessions=True requires vocab_size")
     rng = np.random.default_rng(seed)
     # arrivals draw from a spawned child generator (which does NOT advance
     # `rng`'s bitstream): switching the arrival axis at a fixed seed keeps
     # the tenant/length/user draws identical, so cross-arrival campaign
     # cells compare clumping — not a resampled workload
     arrivals = make_arrivals(arrival, rng.spawn(1)[0], n, rps, **arrival_kw)
+    session_rng = np.random.default_rng((seed, 0x5e55)) if sessions else None
     w = np.asarray([max(s.weight, 0.0) for s in specs], float)
     if w.sum() <= 0:
         raise ValueError("tenant weights must sum to a positive value")
@@ -75,15 +90,26 @@ def mixed_trace(specs: Tuple[TenantSpec, ...], n: int = 1000,
         plens[mask] = _sample_prompt_lens(rng, m, s.prompt_dist)
         olens[mask] = np.maximum(
             (_sample_output_lens(rng, m) * s.output_scale), 4).astype(int)
+    transcripts: Dict[str, List[int]] = {}
     reqs: List[Request] = []
     for i in range(n):
         s = specs[tenant_idx[i]]
         uid = int(rng.integers(0, max(s.n_users, 1)))
-        tokens = rng.integers(0, vocab_size, plens[i]) if vocab_size else None
+        user = f"{s.name}:user{uid}"
+        plen = int(plens[i])
+        if sessions:
+            hist = transcripts.setdefault(user, [])
+            suffix = session_rng.integers(0, vocab_size, plen).tolist()
+            toks = (hist + suffix)[:max_context]
+            transcripts[user] = toks
+            tokens = np.asarray(toks, dtype=np.int64)
+            plen = len(toks)
+        else:
+            tokens = rng.integers(0, vocab_size, plen) if vocab_size else None
         reqs.append(Request(
-            req_id=i, prompt_len=int(plens[i]), max_new_tokens=int(olens[i]),
+            req_id=i, prompt_len=plen, max_new_tokens=int(olens[i]),
             arrival_time=float(arrivals[i]),
-            user_id=f"{s.name}:user{uid}",
+            user_id=user,
             prompt_tokens=tokens,
             priority_class=s.priority_class,
             tenant=s.name,

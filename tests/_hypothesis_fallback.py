@@ -4,9 +4,10 @@ The real hypothesis is declared in pyproject's test extra and is preferred
 whenever importable (CI installs it); this fallback keeps the property tests
 RUNNING — not skipped — in hermetic environments with no package index.  It
 implements just the surface this repo uses (`given`, `settings`, and the
-`integers` / `floats` / `lists` / `tuples` strategies) by drawing a fixed
-number of seeded pseudo-random examples, with a bias toward interval
-endpoints since boundary values are where sort/partition code breaks.
+`integers` / `floats` / `booleans` / `sampled_from` / `lists` / `tuples`
+strategies) by drawing a fixed number of seeded pseudo-random examples, with
+a bias toward interval endpoints since boundary values are where
+sort/partition code breaks.
 
 No shrinking, no example database: a failure reports the drawn arguments in
 the assertion traceback and is exactly reproducible (seeds derive from the
@@ -47,6 +48,15 @@ def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
             return lo if rng.random() < 0.5 else hi
         return float(rng.uniform(lo, hi))
     return _Strategy(draw)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(values) -> _Strategy:
+    pool = list(values)
+    return _Strategy(lambda rng: pool[int(rng.integers(0, len(pool)))])
 
 
 def tuples(*strategies: _Strategy) -> _Strategy:
@@ -93,7 +103,7 @@ def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
 def install() -> None:
     """Register the fallback as `hypothesis` / `hypothesis.strategies`."""
     strat = types.ModuleType("hypothesis.strategies")
-    for f in (integers, floats, tuples, lists):
+    for f in (integers, floats, booleans, sampled_from, tuples, lists):
         setattr(strat, f.__name__, f)
     hyp = types.ModuleType("hypothesis")
     hyp.given = given

@@ -99,5 +99,26 @@ def test_build_trace_axes():
     assert {r.tenant for r in mix} <= {"enterprise", "pro", "free"}
     bg = C.build_trace("bgpt:central", "poisson", 8.0, 0, 50)
     assert all(r.tenant == "default" and not r.has_slo for r in bg)
+    # sess:<suite> carries real session tokens for the prefix directory
+    sess = C.build_trace("sess:chat_vs_batch", "poisson", 8.0, 0, 50)
+    assert all(r.prompt_tokens is not None
+               and len(r.prompt_tokens) == r.prompt_len
+               and r.prompt_len <= C.SESSION_MAX_CONTEXT for r in sess)
     with pytest.raises(ValueError):
         C.build_trace("nope:x", "poisson", 8.0, 0, 10)
+
+
+def test_dispatch_cell_beats_rr_on_session_workload(tmp_path):
+    """The ISSUE-6 acceptance cell at smoke size: on a sticky session
+    workload, 'combined' dispatch must beat 'rr' on prefix hit rate, and the
+    prefix columns must land in the artifacts/report."""
+    m = tiny_matrix(variants=("rr", "combined"),
+                    workloads=("sess:chat_vs_batch",), arrivals=("mmpp",),
+                    n_requests=60)
+    rows, _ = run(m, tmp_path)
+    by_v = {r["variant"]: r for r in rows}
+    assert {"prefix_hits", "prefix_probed", "prefix_hit_rate"} <= \
+        set(by_v["rr"])
+    assert by_v["combined"]["prefix_hit_rate"] > by_v["rr"]["prefix_hit_rate"]
+    md = (tmp_path / "results.md").read_text()
+    assert "prefix hit" in md and "| combined |" in md

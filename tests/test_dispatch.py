@@ -1,0 +1,286 @@
+"""Engine-level scored dispatch (core/dispatch.py) unit + property tests.
+
+The properties pin the dispatch scorer's contract (ISSUE 6):
+  * never selects an unhealthy engine,
+  * with equal load, selects the engine holding the longest prefix,
+  * a sticky user maps to a stable engine absent KV pressure,
+  * the decision is permutation-invariant over engine-id registration order.
+Plus PrefixDirectory semantics: block accounting, cache subscription,
+eviction/clear flow-through, and purge-on-failure.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dispatch import (DISPATCH_WEIGHTS, DispatchCore,
+                                 DispatchWeights, ScoredRouter)
+from repro.core.gimbal import DISPATCH_VARIANTS, make_router, variant_flags
+from repro.core.prefix_cache import PrefixCache, block_hashes
+from repro.core.prefix_directory import PrefixDirectory
+from repro.core.router import RoundRobinRouter
+from repro.core.types import EngineMetrics, GimbalConfig, Request
+
+BS = 16  # directory/cache block size
+
+
+def req(rid=0, tokens=None, plen=None, t=0.0, user=None):
+    if tokens is not None:
+        tokens = np.asarray(tokens, dtype=np.int64)
+        plen = len(tokens)
+    return Request(req_id=rid, prompt_len=plen or 64, max_new_tokens=8,
+                   arrival_time=t, user_id=user, prompt_tokens=tokens)
+
+
+def metrics(now, per_engine):
+    """per_engine: {eid: (kv_usage, running_load)} or {eid: (kv, load, healthy)}."""
+    out = {}
+    for eid, v in per_engine.items():
+        kv, load, healthy = (v if len(v) == 3 else (*v, True))
+        out[eid] = EngineMetrics(engine_id=eid, kv_usage=kv, running_load=load,
+                                 timestamp=now, healthy=healthy)
+    return out
+
+
+def toks(n_blocks, base=0):
+    """n_blocks full blocks of deterministic tokens."""
+    return list(range(base, base + n_blocks * BS))
+
+
+# --- PrefixDirectory semantics ----------------------------------------------
+
+def test_directory_longest_prefix_and_best_engine():
+    d = PrefixDirectory(block_size=BS)
+    t = toks(4)
+    d.record(0, t[:2 * BS])
+    d.record(1, t)
+    d.record(2, toks(4, base=10_000))     # disjoint content
+    held = d.longest_prefix(t)
+    assert held == {0: 2 * BS, 1: 4 * BS}
+    assert d.best_engine(t) == (1, 4 * BS)
+    assert d.best_engine(toks(2, base=99_000)) is None
+    # prefix property: a matching later block without its parent run is dead
+    d2 = PrefixDirectory(block_size=BS)
+    d2.record(0, t)
+    d2._held[0].remove(block_hashes(t, BS)[0])    # knock out the first block
+    assert d2.longest_prefix(t) == {}
+
+
+def test_directory_ties_break_to_lowest_engine_id():
+    d = PrefixDirectory(block_size=BS)
+    t = toks(3)
+    d.record(5, t)
+    d.record(2, t)
+    assert d.best_engine(t) == (2, 3 * BS)
+
+
+def test_directory_subscribes_to_cache_insert_and_evict():
+    d = PrefixDirectory(block_size=BS)
+    cache = PrefixCache(block_size=BS, capacity_blocks=4)
+    d.attach(0, cache)
+    cache.insert(toks(3), now=0.0)
+    assert d.blocks_held(0) == 3
+    # LRU churn past capacity evicts the oldest blocks from the directory too
+    cache.insert(toks(3, base=50_000), now=1.0)
+    assert len(cache) == 4
+    assert d.blocks_held(0) == 4
+    # head blocks were evicted, so the advertised leading run shrank
+    assert d.longest_prefix(toks(3)).get(0, 0) < 3 * BS
+    cache.clear()                                  # node failure: all gone
+    assert d.blocks_held(0) == 0
+
+
+def test_directory_purge_engine():
+    d = PrefixDirectory(block_size=BS)
+    t = toks(3)
+    d.record(0, t)
+    d.record(1, t[:BS])
+    d.purge_engine(0)
+    assert d.blocks_held(0) == 0
+    assert d.longest_prefix(t) == {1: BS}
+
+
+def test_directory_rejects_mismatched_block_size():
+    d = PrefixDirectory(block_size=BS)
+    import pytest
+    with pytest.raises(ValueError):
+        d.attach(0, PrefixCache(block_size=8))
+
+
+# --- variant registration ----------------------------------------------------
+
+def test_dispatch_variants_registered():
+    for v in DISPATCH_VARIANTS:
+        f = variant_flags(v)
+        assert f["sjf"] and f["edr"] and not f["dplb"]
+        r = make_router(v, [0, 1], GimbalConfig(),
+                        directory=PrefixDirectory(block_size=BS))
+        if v == "rr":
+            assert type(r) is RoundRobinRouter
+        else:
+            assert isinstance(r, ScoredRouter)
+            assert r.weights == DISPATCH_WEIGHTS[v]
+
+
+# --- scorer unit behaviour ---------------------------------------------------
+
+def _scored(variant="combined", n=3, directory=None):
+    return ScoredRouter(list(range(n)), GimbalConfig(),
+                        directory=directory or PrefixDirectory(block_size=BS),
+                        weights=DISPATCH_WEIGHTS[variant])
+
+
+def test_prefix_variant_follows_directory():
+    r = _scored("prefix")
+    t = toks(4)
+    r.directory.record(2, t)
+    r.directory.record(1, t[:BS])
+    m = metrics(1.0, {0: (0.2, 100), 1: (0.2, 100), 2: (0.2, 100)})
+    assert r.select(req(tokens=t), m, now=1.0) == 2
+
+
+def test_kv_variant_prefers_headroom():
+    r = _scored("kv")
+    m = metrics(1.0, {0: (0.8, 100), 1: (0.1, 100), 2: (0.5, 100)})
+    assert r.select(req(), m, now=1.0) == 1
+
+
+def test_sticky_suppressed_under_kv_pressure():
+    """Alg.1 line 15: affinity only applies when the sticky engine shows no
+    KV overuse — a saturated sticky engine loses the bonus and the request
+    moves to headroom."""
+    r = _scored("combined")
+    t = toks(2)
+    m0 = metrics(1.0, {0: (0.2, 100), 1: (0.2, 100), 2: (0.2, 100)})
+    first = r.select(req(rid=0, tokens=t, user="u"), m0, now=1.0)
+    assert r.select(req(rid=1, tokens=t, user="u"), m0, now=1.1) == first
+    hot = {e: ((0.97, 3000) if e == first else (0.1, 100)) for e in (0, 1, 2)}
+    moved = r.select(req(rid=2, plen=64, user="u"), metrics(1.2, hot), now=1.2)
+    assert moved != first
+
+
+def test_scores_are_pure_given_inputs():
+    """score() is a pure function of (request, metrics, directory, sticky):
+    equal inputs give equal scores regardless of engine id."""
+    r = _scored("combined")
+    m = EngineMetrics(engine_id=0, kv_usage=0.3, running_load=500,
+                      timestamp=1.0)
+    rq = req(plen=128)
+    s = [r.score(rq, e, m, held_tokens=32, sticky_engine=None)
+         for e in (0, 1, 7)]
+    assert s[0] == s[1] == s[2]
+
+
+# --- hypothesis properties ---------------------------------------------------
+
+engine_states = st.lists(
+    st.tuples(st.floats(min_value=0.0, max_value=1.0),     # kv_usage
+              st.integers(min_value=0, max_value=10_000),  # running_load
+              st.booleans()),                              # healthy
+    min_size=2, max_size=8)
+
+
+@settings(max_examples=60, deadline=None)
+@given(states=engine_states, variant=st.sampled_from(DISPATCH_VARIANTS),
+       uid=st.sampled_from([None, "a", "b"]))
+def test_never_selects_unhealthy_engine(states, variant, uid):
+    if not any(h for _, _, h in states):
+        states[0] = (states[0][0], states[0][1], True)   # ensure one healthy
+    r = make_router(variant, list(range(len(states))), GimbalConfig(),
+                    directory=PrefixDirectory(block_size=BS))
+    m = metrics(1.0, {e: s for e, s in enumerate(states)})
+    for rid in range(4):
+        e = r.select(req(rid=rid, tokens=toks(2), user=uid), m, now=1.0)
+        assert m[e].healthy
+
+
+@settings(max_examples=60, deadline=None)
+@given(blocks=st.lists(st.integers(min_value=0, max_value=6),
+                       min_size=2, max_size=6),
+       variant=st.sampled_from(["prefix", "combined"]))
+def test_equal_load_selects_longest_prefix(blocks, variant):
+    """With identical KV/load everywhere, the directory decides: the engine
+    advertising the longest held prefix of the prompt wins."""
+    best = max(blocks)
+    if blocks.count(best) != 1:
+        blocks[blocks.index(best)] = best + 1    # make the argmax unique
+        best += 1
+    if best == 0:
+        return
+    d = PrefixDirectory(block_size=BS)
+    t = toks(max(blocks) + 1)
+    for e, b in enumerate(blocks):
+        if b:
+            d.record(e, t[:b * BS])
+    r = ScoredRouter(list(range(len(blocks))), GimbalConfig(), directory=d,
+                     weights=DISPATCH_WEIGHTS[variant])
+    m = metrics(1.0, {e: (0.3, 500) for e in range(len(blocks))})
+    assert r.select(req(tokens=t), m, now=1.0) == blocks.index(best)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(min_value=2, max_value=8),
+       variant=st.sampled_from(["sticky", "combined"]),
+       kv=st.floats(min_value=0.0, max_value=0.85))
+def test_sticky_user_is_stable_absent_kv_pressure(n, variant, kv):
+    r = ScoredRouter(list(range(n)), GimbalConfig(),
+                     directory=PrefixDirectory(block_size=BS),
+                     weights=DISPATCH_WEIGHTS[variant])
+    m = metrics(1.0, {e: (kv, 500) for e in range(n)})
+    first = r.select(req(rid=0, tokens=toks(2), user="u"), m, now=1.0)
+    for rid in range(1, 5):
+        now = 1.0 + 0.1 * rid                    # well inside affinity_ttl
+        m = metrics(now, {e: (kv, 500) for e in range(n)})
+        assert r.select(req(rid=rid, tokens=toks(2), user="u"), m,
+                        now=now) == first
+
+
+@settings(max_examples=40, deadline=None)
+@given(states=engine_states, perm_seed=st.integers(min_value=0, max_value=999),
+       variant=st.sampled_from(["prefix", "kv", "sticky", "combined"]))
+def test_selection_permutation_invariant_over_engine_order(states, perm_seed,
+                                                           variant):
+    """Registering the same engines in a different order must not change the
+    decision: the argmax depends on the (id, score) set only."""
+    n = len(states)
+    ids = list(range(n))
+    perm = list(np.random.default_rng(perm_seed).permutation(n))
+    t = toks(3)
+    routers = []
+    for order in (ids, perm):
+        d = PrefixDirectory(block_size=BS)
+        d.record(min(n - 1, 1), t)               # one engine holds the prefix
+        routers.append(ScoredRouter(order, GimbalConfig(), directory=d,
+                                    weights=DISPATCH_WEIGHTS[variant]))
+    m = metrics(1.0, {e: s for e, s in enumerate(states)})
+    if not any(h for _, _, h in states):
+        m[0] = EngineMetrics(0, kv_usage=states[0][0],
+                             running_load=states[0][1], timestamp=1.0)
+    picks = [r.select(req(tokens=t, user="u"), dict(m), now=1.0)
+             for r in routers]
+    assert picks[0] == picks[1]
+
+
+# --- DispatchCore ------------------------------------------------------------
+
+def test_dispatch_core_logs_assignments_and_handles_failure():
+    core = DispatchCore("combined", [0, 1], GimbalConfig(), block_size=BS)
+    c0, c1 = PrefixCache(block_size=BS), PrefixCache(block_size=BS)
+    core.attach_engine(0, c0)
+    core.attach_engine(1, c1)
+    t = toks(4)
+    c0.insert(t, 0.0)                            # engine 0 advertises the prefix
+    m = metrics(1.0, {0: (0.2, 100), 1: (0.2, 100)})
+    rq = req(rid=7, tokens=t)
+    assert core.dispatch(rq, m, 1.0) == 0
+    assert rq.engine_id == 0
+    assert core.assignment_log() == [(7, 0)]
+    # failure purges the directory and removes the engine from routing
+    core.on_engine_failed(0)
+    assert core.directory.blocks_held(0) == 0
+    assert 0 not in core.router.engine_ids
+    rq2 = req(rid=8, tokens=t)
+    assert core.dispatch(rq2, metrics(1.1, {1: (0.2, 100)}), 1.1) == 1
+    # a hedged move is part of the assignment stream
+    core.record_hedge(rq2, 1)
+    assert core.assignment_log() == [(7, 0), (8, 1), (8, 1)]
+    core.on_engine_restored(0)
+    assert 0 in core.router.engine_ids

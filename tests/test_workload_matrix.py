@@ -155,6 +155,51 @@ def test_mixed_trace_per_tenant_shapes_differ():
     assert np.median(by["short"]) < 0.6 * np.median(by["narrow"])
 
 
+def test_session_mode_grows_shared_prefixes():
+    """sessions=True turns each user into a growing transcript: a user's
+    later prompt starts with their earlier prompt (true shared prefixes for
+    the dispatch/prefix layers), capped prefix-stably at max_context."""
+    specs = SUITES["chat_vs_batch"]
+    trace = mixed_trace(specs, n=300, seed=4, sessions=True, vocab_size=5000,
+                        max_context=1024)
+    by_user = {}
+    grew = 0
+    for r in trace:
+        toks = list(r.prompt_tokens)
+        assert r.prompt_len == len(toks) <= 1024
+        prev = by_user.get(r.user_id)
+        if prev is not None:
+            assert toks[:len(prev)] == prev     # prefix property, always
+            grew += len(toks) > len(prev)
+        by_user[r.user_id] = toks
+    assert grew > 30                            # transcripts actually grow
+
+
+def test_session_mode_keeps_workload_paired():
+    """sessions=True must not resample the workload: tenants, users,
+    arrivals and the per-turn (new-suffix) length draws stay identical to
+    the token-less trace at the same seed — session cells compare token
+    locality, nothing else."""
+    specs = SUITES["three_tier"]
+    ref = mixed_trace(specs, n=200, seed=6)
+    sess = mixed_trace(specs, n=200, seed=6, sessions=True, vocab_size=5000)
+    assert [(r.tenant, r.user_id, r.arrival_time, r.max_new_tokens)
+            for r in sess] == \
+           [(r.tenant, r.user_id, r.arrival_time, r.max_new_tokens)
+            for r in ref]
+    # first turn of each user: same length draw, modulo the context cap
+    seen = set()
+    for r_ref, r_sess in zip(ref, sess):
+        if r_sess.user_id not in seen:
+            assert r_sess.prompt_len == min(r_ref.prompt_len, 512)
+            seen.add(r_sess.user_id)
+
+
+def test_session_mode_requires_vocab():
+    with pytest.raises(ValueError):
+        mixed_trace(SUITES["uniform"], n=10, sessions=True)
+
+
 def test_suite_trace_unknown_names():
     with pytest.raises(ValueError):
         suite_trace("no-such-suite")
