@@ -27,9 +27,14 @@ single-tenant BurstGPT shape (Fig. 5) with no SLOs — the control cells;
 transcripts (real shared prefixes), the sticky workload the engine-level
 dispatch axis is measured on.
 Variant axis: the paper's five ablations plus ``gimbal_p`` (gimbal with
-preemptive priority scheduling, the beyond-paper mixed-tenant mode) and the
+preemptive priority scheduling, the beyond-paper mixed-tenant mode),
+``shed`` (gimbal with SLO-aware admission control — load shedding) and the
 engine-level dispatch ladder ``rr``/``prefix``/``kv``/``sticky``/``combined``
 (core/dispatch.py; SJF + EDR held fixed, only the dispatch rule varies).
+Fault axis: ``fault:<drill>`` runs the cell under a timed fault drill
+(distributed/drill.py DRILLS — silent crash with HealthMonitor
+auto-detection, orchestrated KV-migrated failover, elastic resize) and adds
+goodput-retention / detection / recovery columns against the no-fault twin.
 """
 from __future__ import annotations
 
@@ -54,15 +59,17 @@ DOCS = Path(__file__).resolve().parent.parent / "docs"
 # 3 = expert_skew axis + replicated expert level (eplb / gimbal+rep variants,
 # hotspot-multiplier trajectory); 4 = engine-level dispatch (DispatchCore
 # assignment path, rr/prefix/kv/sticky/combined variants, sess: session
-# workloads, prefix-hit columns).
-CAMPAIGN_SCHEMA = 4
+# workloads, prefix-hit columns); 5 = fault axis (distributed/drill.py
+# drills + HealthMonitor auto-failover + "shed" SLO-aware admission control,
+# goodput-retention/recovery columns) and shed-aware attainment accounting.
+CAMPAIGN_SCHEMA = 5
 
 MODEL = "qwen3-30b-a3b"
 N_ENGINES = 2
 KV_POOL = 60_000
 MMPP_BURSTINESS = 4.0           # benchmarks/common.py calibration
 CAMPAIGN_VARIANTS = ("vllm", "dplb", "sjfs", "edr", "eplb", "gimbal",
-                     "gimbal+rep", "gimbal_p",
+                     "gimbal+rep", "gimbal_p", "shed",
                      "rr", "prefix", "kv", "sticky", "combined")
 # vocabulary for sess:<suite> session-transcript token draws (the value only
 # shapes block-hash identity, not cost-model time) and the transcript cap:
@@ -85,6 +92,18 @@ TAU = 400
 # paper's 1.0/1.2/1.4 RPS at equal utilization)
 RPS_GRID = (7.14, 8.57, 10.0)
 PAPER_RPS_LABELS = ("1.0", "1.2", "1.4")
+# fault axis (distributed/drill.py DRILLS): every non-"none" cell arms the
+# HealthMonitor below, so failover is auto-detected from missed heartbeats —
+# no cell ever calls fail_engine by hand.  Timeouts sized for ~20-50 s cells.
+FAULT_HEALTH = {"heartbeat_timeout": 0.5, "suspect_strikes": 2}
+# "shed" variant slack: the TTFT estimate (queue depth × static cost model)
+# is deliberately conservative — it assumes the whole backlog precedes the
+# request, which SJF usually beats — so shedding at the raw deadline drops
+# requests that would have made it; 3x calibrates the estimator back to
+# "only shed the truly hopeless" (the slack sweep in tests/test_fault_drill
+# territory: at 3.0 both attainment AND goodput beat no-shedding under
+# kill + flash crowd)
+SHED_SLACK = 3.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,21 +117,30 @@ class Matrix:
     seeds: Tuple[int, ...]
     n_requests: int = 400
     expert_skew: Tuple[str, ...] = ("base",)    # EXPERT_SKEW keys
+    fault: Tuple[str, ...] = ("none",)          # distributed/drill.py DRILLS
 
     def cells(self) -> List[Dict]:
         out = []
-        for v, w, a, r, s, x in itertools.product(
+        for v, w, a, r, s, x, f in itertools.product(
                 self.variants, self.workloads, self.arrivals, self.rps,
-                self.seeds, self.expert_skew):
+                self.seeds, self.expert_skew, self.fault):
             out.append({"variant": v, "workload": w, "arrival": a,
                         "rps": r, "seed": s, "n": self.n_requests,
-                        "expert_skew": x})
+                        "expert_skew": x, "fault": f})
         return out
 
 
 def cell_key(c: Dict) -> str:
     return (f"{c['variant']}|{c['workload']}|{c['arrival']}|{c['rps']}"
-            f"|{c['seed']}|{c['n']}|{c.get('expert_skew', 'base')}|{MODEL}")
+            f"|{c['seed']}|{c['n']}|{c.get('expert_skew', 'base')}"
+            f"|{c.get('fault', 'none')}|{MODEL}")
+
+
+def twin_key(c: Dict) -> Tuple:
+    """Everything but the fault axis: a fault cell's no-fault twin, the
+    baseline its goodput-retention is computed against."""
+    return (c["variant"], c["workload"], c["arrival"], c["rps"], c["seed"],
+            c["n"], c.get("expert_skew", "base"))
 
 
 MATRICES: Dict[str, Matrix] = {
@@ -128,34 +156,52 @@ MATRICES: Dict[str, Matrix] = {
         arrivals=("poisson", "mmpp", "gamma", "diurnal", "flash"),
         rps=RPS_GRID,
         seeds=(0, 1, 2),
-        n_requests=400),
+        n_requests=400,
+        fault=("none", "kill", "kill_restore", "kill_migrate", "elastic")),
     # ≥100 cells in minutes on CPU: the acceptance-criterion matrix.  The
     # expert_skew axis pairs every cell with a hot-expert-skewed twin, so the
     # gimbal-vs-gimbal+rep hotspot-multiplier comparison lands in the
-    # headline BENCH_campaign.json
+    # headline BENCH_campaign.json; the fault axis pairs every cell with a
+    # kill_restore drill twin (engine 1 crashes silently at 25% of the trace,
+    # the HealthMonitor detects and fails it over, it rejoins at 60%), so
+    # goodput-retention/recovery-time land there too
     "quick": Matrix(
         name="quick",
         variants=("vllm", "sjfs", "eplb", "gimbal", "gimbal+rep", "gimbal_p",
-                  "rr", "combined"),
+                  "shed", "rr", "combined"),
         workloads=("mix:chat_vs_batch", "mix:three_tier", "bgpt:random",
                    "sess:chat_vs_batch"),
         arrivals=("poisson", "mmpp", "flash"),
         rps=(8.57, 10.0),
         seeds=(0, 1),
         n_requests=200,
-        expert_skew=("base", "hot")),
+        expert_skew=("base", "hot"),
+        fault=("none", "kill_restore")),
     # CI-sized: exercises every moving part (mix + bgpt + session workloads,
-    # two arrival processes, preemptive + scored-dispatch variants, resume
-    # path) in seconds
+    # two arrival processes, preemptive + scored-dispatch + shedding
+    # variants, the kill_restore drill, resume path) in seconds
     "smoke": Matrix(
         name="smoke",
-        variants=("vllm", "gimbal_p", "gimbal+rep", "combined"),
+        variants=("vllm", "gimbal_p", "gimbal+rep", "shed", "combined"),
         workloads=("mix:chat_vs_batch", "bgpt:random", "sess:chat_vs_batch"),
         arrivals=("mmpp", "flash"),
         rps=(10.0,),
         seeds=(0,),
         n_requests=60,
-        expert_skew=("hot",)),
+        expert_skew=("hot",),
+        fault=("none", "kill_restore")),
+    # the robustness study: every drill × {gimbal, preemptive, shedding}
+    # under flash crowds and bursty arrivals — the shed-vs-noshed goodput
+    # contrast and the detection/recovery latency distributions
+    "fault": Matrix(
+        name="fault",
+        variants=("gimbal", "gimbal_p", "shed"),
+        workloads=("mix:chat_vs_batch", "mix:three_tier"),
+        arrivals=("flash", "mmpp"),
+        rps=(8.57, 10.0),
+        seeds=(0, 1),
+        n_requests=200,
+        fault=("none", "kill", "kill_restore", "kill_migrate", "elastic")),
     # the paper's §V-A.7 ablation table (benchmarks/run.py delegates here)
     # plus the repo's expert-level baselines (count-only EPLB, replication)
     "ablation": Matrix(
@@ -195,14 +241,16 @@ def _report_cols(rep) -> Dict[str, float]:
             "throughput_tok_s": rep.throughput_tok_s,
             "slo_attainment": rep.slo_attainment,
             "goodput_tok_s": rep.goodput_tok_s,
-            "goodput_req_s": rep.goodput_req_s}
+            "goodput_req_s": rep.goodput_req_s,
+            "shed": rep.shed}
 
 
 def run_cell(cell: Dict) -> Dict:
-    """Simulate one (variant × workload × arrival × rps × seed) cell.
-    Deterministic in the cell key; safe to run in a worker process."""
+    """Simulate one (variant × workload × arrival × rps × seed × fault)
+    cell.  Deterministic in the cell key; safe to run in a worker process."""
     from repro.configs import get_config
     from repro.core.types import GimbalConfig
+    from repro.distributed.fault import HealthConfig
     from repro.sim.simulator import simulate
 
     variant = cell["variant"]
@@ -211,16 +259,30 @@ def run_cell(cell: Dict) -> Dict:
         variant, gcfg = "gimbal", GimbalConfig(tau=TAU, enable_preemption=True)
     elif variant == "gimbal+rep":
         gcfg = GimbalConfig(tau=TAU, redundancy=REP_REDUNDANCY)
+    elif variant == "shed":
+        variant, gcfg = "gimbal", GimbalConfig(tau=TAU, enable_shedding=True,
+                                               shed_slack=SHED_SLACK)
+    fault = cell.get("fault", "none")
+    drill = fault if fault != "none" else None
+    # faulted cells run with auto-detection armed: the drill only crashes the
+    # engine; the HealthMonitor must notice and fail it over
+    health = HealthConfig(**FAULT_HEALTH) if drill is not None else None
     trace = build_trace(cell["workload"], cell["arrival"], cell["rps"],
                         cell["seed"], cell["n"])
     t0 = time.time()
     res = simulate(trace, variant, get_config(MODEL), n_engines=N_ENGINES,
                    hw="a100", gcfg=gcfg, kv_pool_tokens=KV_POOL,
                    seed=cell["seed"],
-                   hot_boost=EXPERT_SKEW[cell.get("expert_skew", "base")])
+                   hot_boost=EXPERT_SKEW[cell.get("expert_skew", "base")],
+                   drill=drill, health=health)
     row = dict(cell)
     row.update(_report_cols(res.report))
     row["preemptions"] = res.preemptions
+    row["n_shed"] = res.n_shed
+    row["rerouted"] = res.rerouted
+    row["detect_s"] = res.detect_s
+    row["recovery_s"] = res.recovery_s
+    row["lifecycle"] = [[k, e] for k, e in res.lifecycle]
     row["prefix_hits"] = res.prefix_hits
     row["prefix_probed"] = res.prefix_probed
     row["prefix_hit_rate"] = res.prefix_hit_rate
@@ -294,7 +356,9 @@ def render_report(rows: List[Dict], matrix: Matrix) -> str:
     """docs/results.md: per-(workload, arrival) tables mirroring the paper's
     §V layout — one row per (variant, rps) averaged over seeds, with
     TTFT/TPOT, SLO-attainment and goodput columns plus the per-class
-    attainment split."""
+    attainment split.  Fault-drill cells get their own section (goodput
+    retention vs the no-fault twin, shed/re-route counts, detection and
+    recovery latency); the headline tables stay fault-free."""
     classes = sorted({c for r in rows for c in r["by_class"]})
     lines = [
         "# Campaign results",
@@ -306,14 +370,16 @@ def render_report(rows: List[Dict], matrix: Matrix) -> str:
         f"{len(matrix.variants)} variants × {len(matrix.workloads)} workloads"
         f" × {len(matrix.arrivals)} arrivals × {len(matrix.rps)} rates × "
         f"{len(matrix.seeds)} seeds × {len(matrix.expert_skew)} expert-skew "
-        f"levels (n={matrix.n_requests} requests/cell, "
+        f"levels × {len(matrix.fault)} fault drills "
+        f"(n={matrix.n_requests} requests/cell, "
         f"model `{MODEL}`, {N_ENGINES} engines, {KV_POOL} KV tokens).",
         "",
         "Latencies in simulator seconds; **goodput** counts only tokens from"
         " requests that met their TTFT/TPOT deadlines, and **attainment**"
         " grades only requests that carried a target (SLO-less cells show"
-        " 1.0 with goodput = throughput). See docs/experiments.md for the"
-        " paper mapping and docs/scheduling.md for the SLO semantics.",
+        " 1.0 with goodput = throughput; shed requests count as misses)."
+        " See docs/experiments.md for the paper mapping and"
+        " docs/scheduling.md for the SLO + fault-tolerance semantics.",
         "",
     ]
     for w in matrix.workloads:
@@ -321,7 +387,8 @@ def render_report(rows: List[Dict], matrix: Matrix) -> str:
         lines.append("")
         for a in matrix.arrivals:
             cell_rows = [r for r in rows
-                         if r["workload"] == w and r["arrival"] == a]
+                         if r["workload"] == w and r["arrival"] == a
+                         and r.get("fault", "none") == "none"]
             if not cell_rows:
                 continue
             lines.append(f"### Arrival process `{a}`")
@@ -358,7 +425,76 @@ def render_report(rows: List[Dict], matrix: Matrix) -> str:
                              _fmt(_mean_over_seeds(sel, "moe_mult"))]
                             + per_class) + " |")
             lines.append("")
+    lines.extend(_render_fault_section(rows, matrix))
     return "\n".join(lines) + "\n"
+
+
+def _render_fault_section(rows: List[Dict], matrix: Matrix) -> List[str]:
+    """The fault-drill tables: one per drill, goodput retention vs the
+    no-fault twin cell plus detection/recovery latencies.  Empty when the
+    matrix carries no drills."""
+    faults = [f for f in matrix.fault if f != "none"]
+    if not faults:
+        return []
+    lines = [
+        "## Fault drills",
+        "",
+        "Each drilled cell is paired with its no-fault twin (same variant /"
+        " workload / arrival / rps / seed / skew).  **retention** ="
+        " drilled goodput ÷ twin goodput; **detect** = silent crash →"
+        " HealthMonitor declares the engine dead (auto-detection, no manual"
+        " fail_engine); **recovery** = failover → last orphaned request"
+        " finished or shed.  `shed` / `rerouted` are per-cell request"
+        " counts.  Drills are defined in `repro/distributed/drill.py`.",
+        "",
+    ]
+    for f in faults:
+        sel_f = [r for r in rows if r.get("fault") == f]
+        if not sel_f:
+            continue
+        lines.append(f"### Drill `{f}`")
+        lines.append("")
+        hdr = ["variant", "workload", "arrival", "rps", "goodput tok/s",
+               "retention", "SLO attain", "shed", "rerouted", "detect s",
+               "recovery s"]
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+        for v in matrix.variants:
+            for w in matrix.workloads:
+                for a in matrix.arrivals:
+                    for rps in matrix.rps:
+                        sel = [r for r in sel_f
+                               if r["variant"] == v and r["workload"] == w
+                               and r["arrival"] == a and r["rps"] == rps]
+                        if not sel:
+                            continue
+                        lines.append("| " + " | ".join(
+                            [v, f"`{w}`", a, _fmt(rps),
+                             _fmt(_mean_over_seeds(sel, "goodput_tok_s")),
+                             _fmt(_mean_over_seeds(sel, "goodput_retention")),
+                             _fmt(_mean_over_seeds(sel, "slo_attainment")),
+                             _fmt(_mean_over_seeds(sel, "n_shed")),
+                             _fmt(_mean_over_seeds(sel, "rerouted")),
+                             _fmt(_mean_over_seeds(sel, "detect_s")),
+                             _fmt(_mean_over_seeds(sel, "recovery_s"))])
+                            + " |")
+        lines.append("")
+    return lines
+
+
+def annotate_retention(rows: List[Dict]) -> None:
+    """Attach ``goodput_retention`` (drilled goodput ÷ no-fault twin's) to
+    every fault cell that has a twin in the row set.  Post-hoc: the twin may
+    finish in another worker, so this runs once over the final rows."""
+    base = {twin_key(r): r for r in rows
+            if r.get("fault", "none") == "none"}
+    for r in rows:
+        if r.get("fault", "none") == "none":
+            continue
+        twin = base.get(twin_key(r))
+        if twin and twin.get("goodput_tok_s"):
+            r["goodput_retention"] = (r["goodput_tok_s"]
+                                      / twin["goodput_tok_s"])
 
 
 # ---------------------------------------------------------------- driver
@@ -404,6 +540,7 @@ def run_campaign(matrix: Matrix, jobs: int = 0,
             # the cache ("completed cells are never re-simulated")
             cache.flush()
     rows = [cache.rows[cell_key(c)] for c in cells]
+    annotate_retention(rows)
     out_json.parent.mkdir(exist_ok=True)
     out_json.write_text(json.dumps(
         {"schema": CAMPAIGN_SCHEMA, "matrix": dataclasses.asdict(matrix),

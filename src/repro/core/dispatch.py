@@ -142,24 +142,50 @@ class DispatchCore:
         self.router = make_router(variant, engine_ids, self.cfg,
                                   directory=self.directory)
         self.assignments: List[Tuple[int, int]] = []
+        # (kind, engine_id) membership-change stream in decision order — the
+        # lifecycle parity oracle: a fault drill driven through the serving
+        # Cluster and through the simulator must produce byte-identical
+        # streams (timestamps deliberately excluded, like SchedEvent)
+        self.lifecycle: List[Tuple[str, int]] = []
 
     # --- engine lifecycle ---------------------------------------------------
+
+    def note_lifecycle(self, kind: str, engine_id: int) -> None:
+        """Append a membership/detection event to the lifecycle stream (the
+        cluster logs auto-detections here so the parity oracle covers the
+        HealthMonitor's decisions, not just their consequences)."""
+        self.lifecycle.append((kind, engine_id))
 
     def attach_engine(self, engine_id: int, prefix_cache=None) -> None:
         if engine_id not in self.router.engine_ids:
             self.router.add_engine(engine_id)
+            self.note_lifecycle("attach", engine_id)
         if prefix_cache is not None:
             self.directory.attach(engine_id, prefix_cache)
 
-    def on_engine_failed(self, engine_id: int) -> None:
+    def on_engine_failed(self, engine_id: int, kv: str = "lost") -> None:
         """Failure invalidation: stop routing there AND forget its prefixes
-        (the node's memory is gone; orphans must not chase stale entries)."""
+        (the node's memory is gone; orphans must not chase stale entries).
+        ``kv`` records how the orphans' KV is handled — "lost" (crash:
+        re-prefill from scratch) vs "migrated" (orchestrated failover: pages
+        travel with the re-route) — purely for the lifecycle stream; the
+        KV semantics themselves live in SchedulerCore.drain(migrate=...)."""
         self.router.remove_engine(engine_id)
         self.directory.purge_engine(engine_id)
+        self.note_lifecycle(f"fail:{kv}", engine_id)
 
     def on_engine_restored(self, engine_id: int) -> None:
         if engine_id not in self.router.engine_ids:
             self.router.add_engine(engine_id)
+            self.note_lifecycle("restore", engine_id)
+
+    def on_engine_removed(self, engine_id: int) -> None:
+        """Graceful scale-in: stop routing there and forget its prefixes.
+        Unlike a failure the drain is orchestrated (KV migrates), but the
+        directory treatment is identical — the node's cache is going away."""
+        self.router.remove_engine(engine_id)
+        self.directory.purge_engine(engine_id)
+        self.note_lifecycle("remove", engine_id)
 
     # --- the decision stream ------------------------------------------------
 
@@ -180,3 +206,6 @@ class DispatchCore:
 
     def assignment_log(self) -> List[Tuple[int, int]]:
         return list(self.assignments)
+
+    def lifecycle_log(self) -> List[Tuple[str, int]]:
+        return list(self.lifecycle)

@@ -28,10 +28,20 @@ The Backend protocol is intentionally small:
                   vLLM's block reuse; the live engine recomputes the full
                   prefill and must not under-charge).
 
-Event stream: every admit / preempt / finish decision is appended to
-``SchedulerCore.events`` in decision order.  The differential parity test
-(tests/test_scheduler_parity.py) drives the same trace through both backends
-and asserts the streams are identical — the refactor's acceptance oracle.
+Event stream: every admit / preempt / finish / shed / downclass decision is
+appended to ``SchedulerCore.events`` in decision order.  The differential
+parity test (tests/test_scheduler_parity.py) drives the same trace through
+both backends and asserts the streams are identical — the refactor's
+acceptance oracle.
+
+SLO-aware admission control (GimbalConfig.enable_shedding): at submit, a
+request whose TTFT deadline is already unmeetable — estimated from queue
+depth × the backend's calibrated cost model (``est_iter_time``) — is
+rejected (``shed_mode="reject"``) or demoted to the lowest priority class
+(``"downclass"``) instead of ballooning the queue.  Shed requests count as
+SLO misses (core/slo.py), so shedding only raises attainment by letting the
+survivors actually meet their deadlines — goodput degrades gracefully under
+flash crowds / engine loss instead of cliff-diving.
 """
 from __future__ import annotations
 
@@ -103,6 +113,12 @@ class Backend(Protocol):
         """Fraction of KV capacity in use, in [0, 1] (Alg. 1 signal)."""
         ...
 
+    def est_iter_time(self, prefill_tokens: int, decode_batch: int,
+                      avg_ctx: float, queue_len: int) -> float:
+        """Estimated wall seconds for one iteration (admission-control
+        hint; 0.0 = no estimate available, shedding never fires)."""
+        ...
+
 
 _UNBLOCKED_RANK = len(PRIORITY_CLASSES) + 1
 
@@ -133,15 +149,68 @@ class SchedulerCore:
         # SLO-attainment / goodput accounting per (tenant, class) — the same
         # tracker code in both planes, parity-tested alongside the events
         self.slo = SLOTracker()
+        # requests rejected by SLO-aware admission control (terminal: they
+        # never enter the queue; cluster/simulator drain accounting counts
+        # them alongside finishes)
+        self.shed: List[Request] = []
 
     # ------------------------------------------------------------------ intake
-    def submit(self, r: Request, now: float = 0.0) -> None:
+    def estimate_ttft(self, r: Request, now: float) -> float:
+        """Admission-control TTFT estimate: the prefill backlog ahead of
+        ``r`` (queue waiting tokens + its own prompt) worked off in chunked-
+        prefill iterations, each dated by the backend's calibrated cost
+        model.  Deliberately conservative-simple — a queue-depth × service-
+        rate product, not a schedule simulation — and a pure function of
+        core state, so the serving and sim planes decide identically."""
+        tokens_ahead = self.queue.waiting_tokens + r.prompt_len
+        chunk = max(self.prefill_budget, 1)
+        iters = -(-tokens_ahead // chunk)       # ceil
+        avg_ctx = (float(np.mean(list(self.ctx_tokens.values())))
+                   if self.ctx_tokens else 0.0)
+        per = self.backend.est_iter_time(min(tokens_ahead, chunk),
+                                         len(self.running), avg_ctx,
+                                         queue_len=len(self.queue))
+        return iters * per
+
+    def _maybe_shed(self, r: Request, now: float) -> bool:
+        """SLO-aware admission control: True = rejected (do not enqueue).
+        Only TTFT-carrying requests that have not yet produced a first token
+        are candidates — a KV-migrated orphan that already hit TTFT
+        elsewhere is never shed, it re-queues with its progress."""
+        if (not self.gcfg.enable_shedding or r.slo_ttft is None
+                or r.first_token_time is not None):
+            return False
+        deadline = r.arrival_time + r.slo_ttft * self.gcfg.shed_slack
+        if now + self.estimate_ttft(r, now) <= deadline:
+            return False
+        if (self.gcfg.shed_mode == "downclass"
+                and r.priority_class != PRIORITY_CLASSES[-1]):
+            # demote instead of drop: it keeps its tokens but yields its
+            # seat-priority to traffic that can still make its deadline
+            r.priority_class = PRIORITY_CLASSES[-1]
+            self.events.append(SchedEvent("downclass", self.steps, r.req_id))
+            return False
+        r.shed_time = now
+        self.shed.append(r)
+        self.slo.observe_shed(r)
+        self.events.append(SchedEvent("shed", self.steps, r.req_id))
+        return True
+
+    def submit(self, r: Request, now: float = 0.0) -> bool:
+        """Enqueue ``r`` (False = rejected by SLO-aware shedding)."""
+        if self._maybe_shed(r, now):
+            return False
         if r.prompt_tokens is not None:
             toks = list(np.asarray(r.prompt_tokens).reshape(-1))
             hits = self.prefix.match(toks, now)
             self.prefix.insert(toks, now)
             r._cached = hits if self.backend.charge_prefix_hits else 0
+        if r.kv_migrated:
+            # the KV pages travelled with the request: nothing to re-prefill
+            # regardless of what this engine's local cache holds
+            r._cached = r.prompt_len
         self.queue.push(r)
+        return True
 
     # ------------------------------------------------------------------ metrics
     def metrics(self, now: float) -> EngineMetrics:
@@ -178,9 +247,11 @@ class SchedulerCore:
         backend may truncate prompts (JaxBackend clips to the slot length),
         so the pool must not be charged for tokens that never materialize —
         otherwise an over-long prompt the backend would happily serve
-        truncated is starved forever by the capacity gate."""
+        truncated is starved forever by the capacity gate.  A KV-migrated
+        orphan arrives holding its generated tokens too."""
+        base = r.prompt_len + (r.generated if r.kv_migrated else 0)
         cap = self.backend.max_ctx_tokens
-        return r.prompt_len if cap is None else min(r.prompt_len, cap)
+        return base if cap is None else min(base, cap)
 
     def _grow_ctx(self, req_id: int) -> None:
         """One more resident token for ``req_id``, capped at the backend's
@@ -314,11 +385,18 @@ class SchedulerCore:
                 self.expert.observe(stats)
             self.running.append(RunningSeq(r, handle, admit_time=now))
             r.engine_id = self.engine_id
-            r.first_token_time = end
-            r.generated = 1
-            self.ctx_tokens[r.req_id] = self._kv_demand(r)
-            self._grow_ctx(r.req_id)        # + the first generated token;
-            #                                 keep kv_tokens == sum(ctx)
+            # a KV-migrated orphan resumes with its progress: its first
+            # token was already delivered elsewhere, so neither TTFT nor
+            # the generated count reset (KV-lost orphans re-prefill and
+            # re-earn their first token like any fresh admit)
+            resumed = r.kv_migrated and r.first_token_time is not None
+            self.ctx_tokens[r.req_id] = self._kv_demand(r)  # incl. migrated gen
+            r.kv_migrated = False
+            if not resumed:
+                r.first_token_time = end
+                r.generated = 1
+                self._grow_ctx(r.req_id)    # + the first generated token;
+                #                             keep kv_tokens == sum(ctx)
         # victims re-queue only AFTER admission (see _evict_for)
         self.queue.extend(victims)
         # one decode step over every previously-running request
@@ -361,14 +439,27 @@ class SchedulerCore:
         return end, finished
 
     # ------------------------------------------------------------------ fault tolerance
-    def drain(self) -> List[Request]:
-        """Pull every request (waiting + running) off this engine, resetting
-        running ones for re-execution elsewhere (KV is lost on failure)."""
+    def drain(self, migrate: bool = False) -> List[Request]:
+        """Pull every request (waiting + running) off this engine.
+
+        ``migrate=False`` (node crash): a running request's KV is gone — its
+        progress resets and it re-prefills from scratch elsewhere.
+
+        ``migrate=True`` (graceful drain / orchestrated failover): the KV
+        pages travel with the request — ``first_token_time``/``generated``
+        survive, the target charges no re-prefill, and admission accounts
+        the migrated generated tokens as resident KV.  (The scheduling /
+        latency semantics of a KV transfer; the live backend still re-runs
+        the prompt prefill physically rather than receiving pages.)"""
         out = self.queue.drain()
         for seq in list(self.running):
             r = seq.r
-            r.first_token_time = None
-            r.generated = 0
+            if migrate:
+                r.kv_migrated = True
+            else:
+                r.first_token_time = None
+                r.generated = 0
+                r.kv_migrated = False
             r.engine_id = None
             self.kv_tokens -= self.ctx_tokens.pop(r.req_id, 0)
             self.backend.release(seq.handle, r)

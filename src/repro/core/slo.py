@@ -30,12 +30,17 @@ class SLOCell:
     with_slo: int = 0               # finished requests that had any target
     tokens: int = 0                 # generated tokens (throughput numerator)
     good_tokens: int = 0            # tokens from SLO-met requests (goodput)
+    shed: int = 0                   # rejected by SLO-aware admission control
 
     @property
     def attainment(self) -> float:
         """Fraction of SLO-carrying requests that met their deadlines; 1.0
-        for SLO-less traffic (vacuously met, so goodput == throughput)."""
-        return self.met_of_tracked / self.with_slo if self.with_slo else 1.0
+        for SLO-less traffic (vacuously met, so goodput == throughput).
+        Shed requests count in the denominator as misses: load shedding must
+        not launder attainment by rejecting the traffic it would have
+        failed — it only wins by letting the survivors meet theirs."""
+        tracked = self.with_slo + self.shed
+        return self.met_of_tracked / tracked if tracked else 1.0
 
     @property
     def met_of_tracked(self) -> int:
@@ -46,7 +51,7 @@ class SLOCell:
     def row(self) -> Dict[str, float]:
         return {"finished": self.finished, "met": self.met,
                 "with_slo": self.with_slo, "tokens": self.tokens,
-                "good_tokens": self.good_tokens,
+                "good_tokens": self.good_tokens, "shed": self.shed,
                 "attainment": self.attainment}
 
 
@@ -67,6 +72,12 @@ class SLOTracker:
             cell.met += 1
             cell.good_tokens += r.generated
 
+    def observe_shed(self, r: Request) -> None:
+        """Record a request rejected by SLO-aware admission control (call
+        exactly once, at the shed decision; the request never finishes)."""
+        cell = self.cells.setdefault((r.tenant, r.priority_class), SLOCell())
+        cell.shed += 1
+
     def merge(self, other: "SLOTracker") -> "SLOTracker":
         """Fold another tracker's cells into this one (cluster roll-up)."""
         for key, c in other.cells.items():
@@ -76,6 +87,7 @@ class SLOTracker:
             mine.with_slo += c.with_slo
             mine.tokens += c.tokens
             mine.good_tokens += c.good_tokens
+            mine.shed += c.shed
         return self
 
     def snapshot(self) -> Dict[str, Dict[str, float]]:

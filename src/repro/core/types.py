@@ -43,6 +43,11 @@ class Request:
     wasted_tokens: int = 0           # generated tokens discarded by preemption
     hedged_at: Optional[float] = None  # last hedged re-dispatch time
     hedges: int = 0                  # times this request was hedged
+    # fault-tolerance lifecycle (serving/cluster.py + sim/simulator.py drills)
+    shed_time: Optional[float] = None  # rejected by SLO-aware admission control
+    kv_migrated: bool = False        # KV pages travelled with the re-route:
+    #                                  progress survives, no re-prefill charge
+    reroutes: int = 0                # times re-dispatched off a failed/removed engine
 
     @property
     def rank(self) -> int:
@@ -64,6 +69,11 @@ class Request:
     @property
     def has_slo(self) -> bool:
         return self.slo_ttft is not None or self.slo_tpot is not None
+
+    @property
+    def was_shed(self) -> bool:
+        """Rejected by SLO-aware admission control (never served)."""
+        return self.shed_time is not None and self.finish_time is None
 
     @property
     def slo_met(self) -> Optional[bool]:
@@ -127,3 +137,11 @@ class GimbalConfig:
     enable_preemption: bool = False  # interactive may evict running batch work
     victim_policy: str = "fewest_tokens"  # fewest_tokens | lowest_class | lru_slot
     max_preemptions: int = 3         # per-request eviction cap (livelock guard)
+    # SLO-aware admission control / load shedding (beyond-paper, flash-crowd
+    # robustness): reject (or down-class) a request at submit when its TTFT
+    # deadline is already unmeetable given queue depth × the cost model
+    # (SchedulerCore.estimate_ttft).  Shed requests count as SLO misses, so
+    # shedding only wins by letting the survivors actually meet theirs.
+    enable_shedding: bool = False
+    shed_slack: float = 1.0          # shed when est TTFT > slack × remaining budget
+    shed_mode: str = "reject"        # "reject" | "downclass" (demote to lowest class)

@@ -44,17 +44,31 @@ class HealthMonitor:
         self.last_seen.pop(engine_id, None)
         self.dead.pop(engine_id, None)
 
+    def mark_dead(self, engine_id: int, now: float) -> None:
+        """An out-of-band failure notice (orchestrated kill / drill event):
+        record the engine dead so ``check`` doesn't re-detect and re-fail
+        an engine the cluster already drained."""
+        if engine_id in self.last_seen:
+            self.dead.setdefault(engine_id, now)
+
     def observe(self, snapshot: Dict[int, EngineMetrics], now: float) -> None:
         for eid, m in snapshot.items():
-            if eid in self.last_seen and m.timestamp > self.last_seen[eid]:
+            if eid not in self.last_seen:
+                # auto-enroll on first heartbeat: an engine added via
+                # Cluster.add_engine (or one the monitor was never told
+                # about) must not be invisible to failure detection
+                self.add_engine(eid, m.timestamp)
+                continue
+            if m.timestamp > self.last_seen[eid]:
                 self.last_seen[eid] = m.timestamp
                 if eid not in self.dead:
                     self.strikes[eid] = 0
 
     def check(self, now: float) -> List[int]:
-        """Returns engines newly declared DEAD this check."""
+        """Returns engines newly declared DEAD this check (sorted for
+        deterministic failover order across planes)."""
         newly = []
-        for eid, seen in self.last_seen.items():
+        for eid, seen in sorted(self.last_seen.items()):
             if eid in self.dead:
                 continue
             if now - seen > self.cfg.heartbeat_timeout:
@@ -85,23 +99,36 @@ class ElasticPolicy:
 
     scale OUT when waiting tokens per engine exceed `out_tokens` for
     `sustain_checks` consecutive checks; scale IN when below `in_tokens`.
+
+    Pressure is averaged over LIVE engines only: a dead engine's frozen
+    metrics would otherwise dilute per-engine pressure and block scale-out
+    exactly when the survivors are drowning.  Callers pass the monitor's
+    ``dead`` set and ``now`` (with ``stale_after`` > 0, snapshots older than
+    that are treated as dead too); the pool-size bounds check uses
+    ``n_engines`` — the actual pool — not the snapshot width.
     """
     out_tokens: int = 20_000
     in_tokens: int = 1_000
     min_engines: int = 1
     max_engines: int = 1024
     sustain_checks: int = 3
+    stale_after: float = 0.0        # 0 = no heartbeat-freshness filter
 
     def __post_init__(self):
         self._hot = 0
         self._cold = 0
 
-    def decide(self, snapshot: Dict[int, EngineMetrics]) -> int:
+    def decide(self, snapshot: Dict[int, EngineMetrics], now: float = None,
+               dead=(), n_engines: int = None) -> int:
         """Returns +1 (add an engine), -1 (remove one), or 0."""
-        if not snapshot:
+        live = [m for eid, m in snapshot.items()
+                if m.healthy and eid not in dead
+                and not (self.stale_after > 0 and now is not None
+                         and now - m.timestamp > self.stale_after)]
+        if not live:
             return 0
-        n = len(snapshot)
-        per_engine = sum(m.running_load for m in snapshot.values()) / n
+        n = n_engines if n_engines is not None else len(live)
+        per_engine = sum(m.running_load for m in live) / len(live)
         if per_engine > self.out_tokens:
             self._hot += 1
             self._cold = 0

@@ -62,6 +62,9 @@ class JaxBackend:
         # so a request can never hold more than one slot's worth of KV — the
         # core's pool accounting must match or over-long prompts starve
         self.max_ctx_tokens: Optional[int] = max_seq
+        # optional offline-profiled CostModel powering est_iter_time (the
+        # SLO-aware shedding estimate); None = shedding never fires here
+        self.cost_hint = None
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.slot_last_token = np.zeros(max_slots, np.int32)
         self.relocations = 0
@@ -172,6 +175,19 @@ class JaxBackend:
     def step_time(self, now: float, prefill_tokens: int, decode_batch: int,
                   avg_ctx: float, queue_len: int) -> float:
         return now      # logical clock: the caller owns time
+
+    def est_iter_time(self, prefill_tokens: int, decode_batch: int,
+                      avg_ctx: float, queue_len: int) -> float:
+        """Admission-control hint: estimated wall seconds for one iteration.
+        The live engine runs on a logical clock, so the estimate comes from
+        an offline-profiled cost model (``cost_hint``, a sim.costmodel
+        CostModel) the way production admission controllers use calibrated
+        service rates; with no hint the estimate is 0.0 and SLO-aware
+        shedding never fires."""
+        if self.cost_hint is None:
+            return 0.0
+        return self.cost_hint.iteration_time(prefill_tokens, decode_batch,
+                                             avg_ctx, queue_len=queue_len)
 
     def kv_usage(self, kv_tokens: int) -> float:
         return self.kv.usage()

@@ -4,13 +4,31 @@ Maps the paper's Figure 2 topology: a global request pool feeds the DP Engine
 Load Balancer, which dispatches to engine replicas; each engine runs its own
 SJF scheduler and (for MoE archs) Expert Dynamic Replacement.
 
-Fault tolerance / elasticity (beyond-paper, required at 1000+ node scale):
-  * fail_engine(): requests on a dead engine are drained and re-routed
-    (KV state is lost -> they re-prefill elsewhere).
-  * add_engine()/remove_engine(): elastic pool resize; the router's candidate
-    set updates live.
+Fault tolerance / elasticity (beyond-paper, required at 1000+ node scale) —
+the engine-lifecycle API every fault drill (distributed/drill.py) drives:
+  * auto-detection: with ``health=HealthConfig(...)`` the cluster owns a
+    HealthMonitor fed from the SAME MetricsBus the balancer reads (a metric
+    snapshot IS the heartbeat) — a silently-dead engine is detected by
+    missed heartbeats and auto-failed, no manual fail_engine() call;
+  * fail_engine(kv="lost"): crash semantics — orphans are drained and
+    re-routed, re-prefilling elsewhere; kv="migrated" is the orchestrated
+    failover: KV pages travel with the re-route, progress survives;
+  * add_engine()/remove_engine(): elastic pool resize registered everywhere
+    it matters (router candidate set, PrefixDirectory, MetricsBus,
+    HealthMonitor); removal drains gracefully (KV migrated), additions can
+    charge an expert-placement warm-up delay before serving;
+  * autoscaling: with ``elastic=ElasticPolicy(...)`` + ``engine_factory``,
+    the cluster resizes itself from live queue pressure (dead/stale engines
+    filtered out of the signal);
+  * SLO-aware shedding: with GimbalConfig.enable_shedding, engines reject
+    requests whose TTFT deadline is already unmeetable (SchedulerCore);
+    ``shed_requests()``/reports count them as SLO misses;
   * hedged dispatch: with GimbalConfig.hedge_threshold > 0, requests stuck in
     a queue past the threshold are re-dispatched to the least-loaded engine.
+
+Every membership change lands in ``DispatchCore.lifecycle_log()`` — with the
+assignment log, the fault-drill parity oracle between this plane and
+sim/simulator.py (tests/test_scheduler_parity.py).
 """
 from __future__ import annotations
 
@@ -19,6 +37,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.core.dispatch import DispatchCore
 from repro.core.slo import SLOTracker
 from repro.core.types import GimbalConfig, Request
+from repro.distributed.fault import ElasticPolicy, HealthConfig, HealthMonitor
 from repro.serving.engine import Engine
 from repro.serving.metrics import (MetricsBus, summarize, summarize_by_class,
                                    summarize_by_tenant)
@@ -27,7 +46,11 @@ from repro.serving.metrics import (MetricsBus, summarize, summarize_by_class,
 class Cluster:
     def __init__(self, engines: Sequence[Engine], variant: str = "gimbal",
                  gimbal_cfg: Optional[GimbalConfig] = None, bus_delay: float = 0.05,
-                 expert_level=None, dispatch_core: Optional[DispatchCore] = None):
+                 expert_level=None, dispatch_core: Optional[DispatchCore] = None,
+                 health: Optional[HealthConfig] = None,
+                 elastic: Optional[ElasticPolicy] = None,
+                 engine_factory: Optional[Callable[[int], Engine]] = None,
+                 warmup_s: float = 0.0):
         """``expert_level``: the ONE ClusterExpertLevel every engine was built
         with (core/gimbal.make_cluster_expert_level) — the cluster owns the
         cluster-wide expert telemetry and exposes its RebalanceEvent stream /
@@ -36,8 +59,17 @@ class Cluster:
         shared it across engines).
 
         ``dispatch_core``: the engine-level dispatch state machine (router +
-        cluster-wide PrefixDirectory + assignment log).  Built from
-        ``variant`` when omitted; pass one in to share or inspect it."""
+        cluster-wide PrefixDirectory + assignment + lifecycle logs).  Built
+        from ``variant`` when omitted; pass one in to share or inspect it.
+
+        ``health``: enable heartbeat failure detection over the metrics bus;
+        ``step()`` then auto-fails silently-dead engines (KV lost).
+        ``elastic`` + ``engine_factory``: enable autoscaling — the policy
+        decides from live bus pressure, the factory builds engines for fresh
+        ids on scale-out, ``remove_engine`` drains the least-loaded on
+        scale-in.  ``warmup_s``: expert-placement warm-up charged to every
+        added engine (it heartbeats but serves nothing until ready —
+        derive it from CostModel.migration_time over the weight bytes)."""
         self.gcfg = gimbal_cfg or GimbalConfig()
         self.engines: Dict[int, Engine] = {e.engine_id: e for e in engines}
         self.dispatch = dispatch_core or DispatchCore(
@@ -50,6 +82,17 @@ class Cluster:
         self.variant = variant
         self.expert_level = expert_level if expert_level is not None else next(
             (e.core.expert for e in engines if e.core.expert is not None), None)
+        # --- lifecycle state (fault drills / elasticity) ---
+        self.monitor = (HealthMonitor(list(self.engines), health)
+                        if health is not None else None)
+        self.elastic = elastic
+        self.engine_factory = engine_factory
+        self.warmup_s = warmup_s
+        self.retired: List[Engine] = []     # gracefully removed; accounting kept
+        self.rerouted = 0                   # orphan re-dispatches (fail + remove)
+        self.fault_log: List[Dict] = []     # timed fail/remove records (telemetry)
+        self._ready_at: Dict[int, float] = {}
+        self._next_engine_id = max(self.engines, default=-1) + 1
 
     # ------------------------------------------------------------------ dispatch
     def submit(self, r: Request, now: float) -> int:
@@ -61,12 +104,20 @@ class Cluster:
     # ------------------------------------------------------------------ execution
     def step(self, now: float) -> List[Request]:
         done: List[Request] = []
-        for e in self.engines.values():
+        for e in list(self.engines.values()):
             if not e.healthy:
+                continue
+            if now < self._ready_at.get(e.engine_id, now):
+                # warm-up: the engine is alive (heartbeats flow, it can be
+                # dispatched to and queue work) but serves nothing until its
+                # expert placement has been materialised
+                self.bus.publish(e.metrics(now))
                 continue
             done.extend(e.step(now))
             self.bus.publish(e.metrics(now))
         self._maybe_hedge(now)
+        self.health_check(now)
+        self.autoscale(now)
         self.finished.extend(done)
         return done
 
@@ -121,57 +172,180 @@ class Cluster:
             self.engines[tgt].submit(r, now)
 
     # ------------------------------------------------------------------ fault tolerance
-    def fail_engine(self, engine_id: int, now: float) -> int:
-        """Simulate a node failure: mark dead, drain, re-route.  Returns the
+    def health_check(self, now: float) -> List[int]:
+        """Feed the HealthMonitor from the bus and auto-fail every engine it
+        newly declares dead (KV lost: a silent death gives no chance to
+        migrate pages).  No-op without ``health=``; ``step()`` calls this
+        every tick, so failover needs no manual ``fail_engine``."""
+        if self.monitor is None:
+            return []
+        self.monitor.observe(self.bus.snapshot(now), now)
+        failed = []
+        for eid in self.monitor.check(now):
+            if eid in self.engines:
+                self.dispatch.note_lifecycle("detect", eid)
+                self.fail_engine(eid, now, kv="lost", detected=True)
+                failed.append(eid)
+            else:
+                self.monitor.remove_engine(eid)   # stale bus entry
+        return failed
+
+    def autoscale(self, now: float) -> int:
+        """One ElasticPolicy decision applied: +1 built via ``engine_factory``
+        (charged ``warmup_s``), -1 drains the least-loaded engine.  No-op
+        without ``elastic=``.  Returns the applied delta."""
+        if self.elastic is None:
+            return 0
+        dead = self.monitor.dead if self.monitor is not None else ()
+        decision = self.elastic.decide(self.bus.snapshot(now), now=now,
+                                       dead=dead, n_engines=len(self.engines))
+        if decision > 0 and self.engine_factory is not None:
+            self.add_engine(self.engine_factory(self.next_engine_id()),
+                            now, warmup_s=self.warmup_s)
+            return +1
+        if decision < 0:
+            victim = self._scale_in_victim(now)
+            if victim is not None:
+                self.remove_engine(victim, now)
+                return -1
+        return 0
+
+    def _scale_in_victim(self, now: float) -> Optional[int]:
+        """Least-loaded ready healthy engine (ties to the lowest id);
+        never the last healthy one."""
+        ready = [e for e in self.engines.values()
+                 if e.healthy and now >= self._ready_at.get(e.engine_id, now)]
+        if len(ready) <= 1:
+            return None
+        return min((e.metrics(now).running_load, e.engine_id)
+                   for e in ready)[1]
+
+    def fail_engine(self, engine_id: int, now: float, kv: str = "lost",
+                    detected: bool = False) -> int:
+        """Node failure: mark dead, drain, re-route.  ``kv="lost"`` (crash):
+        orphans re-prefill from scratch elsewhere; ``kv="migrated"``
+        (orchestrated failover): KV pages travel with the re-route, so
+        generation progress and first-token times survive.  Returns the
         number of re-routed requests."""
         e = self.engines[engine_id]
         e.healthy = False
+        if self.monitor is not None:
+            self.monitor.mark_dead(engine_id, now)
         # stop routing there and forget its prefixes (node memory is gone)
         # BEFORE re-routing orphans, so none chase the dead engine's cache
-        self.dispatch.on_engine_failed(engine_id)
+        self.dispatch.on_engine_failed(engine_id, kv=kv)
         e.prefix.clear()
-        orphans = e.drain_all()
+        orphans = e.drain_all(migrate=(kv == "migrated"))
+        self.fault_log.append({"t": now, "kind": "fail", "engine": engine_id,
+                               "kv": kv, "detected": detected,
+                               "orphans": [r.req_id for r in orphans]})
         for r in orphans:
+            r.reroutes += 1
             self.submit(r, now)
+        self.rerouted += len(orphans)
         return len(orphans)
 
-    def restore_engine(self, engine_id: int) -> None:
-        self.engines[engine_id].healthy = True
+    def restore_engine(self, engine_id: int, now: float = 0.0,
+                       warmup_s: float = 0.0) -> None:
+        e = self.engines[engine_id]
+        e.healthy = True
+        if warmup_s > 0:
+            self._ready_at[engine_id] = now + warmup_s
         self.dispatch.on_engine_restored(engine_id)
+        if self.monitor is not None:
+            self.monitor.add_engine(engine_id, now)
 
-    def add_engine(self, engine: Engine) -> None:
-        self.engines[engine.engine_id] = engine
-        self.dispatch.attach_engine(engine.engine_id,
-                                    getattr(engine, "prefix", None))
+    def add_engine(self, engine: Engine, now: float = 0.0,
+                   warmup_s: float = 0.0) -> None:
+        """Fold a new engine into the pool, registered everywhere membership
+        matters: router candidate set + prefix directory (DispatchCore),
+        metrics bus (first heartbeat published immediately, so the monitor
+        never sees a silent newcomer) and health monitor.  ``warmup_s``
+        charges the expert-placement warm-up: the engine queues dispatched
+        work but serves nothing until ``now + warmup_s``."""
+        eid = engine.engine_id
+        self.engines[eid] = engine
+        self._next_engine_id = max(self._next_engine_id, eid + 1)
+        if warmup_s > 0:
+            self._ready_at[eid] = now + warmup_s
+        self.dispatch.attach_engine(eid, getattr(engine, "prefix", None))
+        self.bus.publish(engine.metrics(now))
+        if self.monitor is not None:
+            self.monitor.add_engine(eid, now)
+
+    def remove_engine(self, engine_id: int, now: float = 0.0) -> int:
+        """Graceful scale-in: stop routing there, migrate the drained
+        requests' KV with their re-route, drop the engine from every
+        registry.  Its accounting (SLO cells, shed list, counters) is kept
+        on ``self.retired``.  Returns the number of re-routed requests."""
+        e = self.engines[engine_id]
+        self.dispatch.on_engine_removed(engine_id)
+        orphans = e.drain_all(migrate=True)
+        e.prefix.clear()
+        del self.engines[engine_id]
+        self._ready_at.pop(engine_id, None)
+        self.bus.forget(engine_id)
+        if self.monitor is not None:
+            self.monitor.remove_engine(engine_id)
+        self.retired.append(e)
+        self.fault_log.append({"t": now, "kind": "remove", "engine": engine_id,
+                               "orphans": [r.req_id for r in orphans]})
+        for r in orphans:
+            r.reroutes += 1
+            self.submit(r, now)
+        self.rerouted += len(orphans)
+        return len(orphans)
+
+    def next_engine_id(self) -> int:
+        """Fresh id for an elastically-added engine.  Ids are never reused:
+        the bus, monitor and lifecycle log all key on them."""
+        eid = self._next_engine_id
+        self._next_engine_id += 1
+        return eid
+
+    def ready_at(self, engine_id: int) -> float:
+        """When the engine's warm-up ends (0.0 = already serving)."""
+        return self._ready_at.get(engine_id, 0.0)
 
     # ------------------------------------------------------------------ reporting
+    def _all_engines(self) -> List[Engine]:
+        """Current pool + gracefully-removed engines: removal must never
+        erase accounting (SLO cells, shed lists, counters)."""
+        return list(self.engines.values()) + self.retired
+
+    def shed_requests(self) -> List[Request]:
+        """Requests rejected by SLO-aware admission control, cluster-wide."""
+        return [r for e in self._all_engines() for r in e.core.shed]
+
     def report(self, horizon: Optional[float] = None):
-        return summarize(self.finished, horizon)
+        return summarize(self.finished + self.shed_requests(), horizon)
 
     def report_by_class(self, horizon: Optional[float] = None):
         """Per-priority-class latency breakdown (mixed-tenant view)."""
-        return summarize_by_class(self.finished, horizon)
+        return summarize_by_class(self.finished + self.shed_requests(),
+                                  horizon)
 
     def report_by_tenant(self, horizon: Optional[float] = None):
         """Per-tenant latency + SLO-goodput breakdown."""
-        return summarize_by_tenant(self.finished, horizon)
+        return summarize_by_tenant(self.finished + self.shed_requests(),
+                                   horizon)
 
     def slo_report(self) -> Dict[str, Dict[str, float]]:
         """Per-(tenant, class) SLO counters merged across engine cores —
         the live-engine twin of ``SimResult.slo``."""
         slo = SLOTracker()
-        for e in self.engines.values():
+        for e in self._all_engines():
             slo.merge(e.core.slo)
         return slo.snapshot()
 
     def preemption_stats(self) -> Dict[str, int]:
-        return {"preemptions": sum(e.preemptions for e in self.engines.values())}
+        return {"preemptions": sum(e.preemptions for e in self._all_engines())}
 
     def hedge_stats(self) -> Dict[str, int]:
         """Straggler-mitigation counters: total hedged re-dispatches (each
         engine counts requests hedged AWAY from its queue)."""
         return {"hedges": sum(e.core.hedged_away
-                              for e in self.engines.values())}
+                              for e in self._all_engines())}
 
     def expert_report(self) -> Dict[str, float]:
         """Cluster-wide expert-level telemetry: the shared level's coupling
@@ -194,7 +368,7 @@ class Cluster:
                                      for eid in self.engines}}
 
     def prefix_stats(self) -> Dict[str, float]:
-        hits = sum(e.prefix.hit_blocks for e in self.engines.values())
-        probed = sum(e.prefix.probed_blocks for e in self.engines.values())
+        hits = sum(e.prefix.hit_blocks for e in self._all_engines())
+        probed = sum(e.prefix.probed_blocks for e in self._all_engines())
         return {"hit_blocks": hits, "probed_blocks": probed,
                 "hit_rate": hits / max(probed, 1)}

@@ -66,8 +66,9 @@ class Engine:
                                   engine_id=engine_id, expert_level=rebalancer)
 
     # ------------------------------------------------------------------ public API
-    def submit(self, r: Request, now: float = 0.0) -> None:
-        self.core.submit(r, now)
+    def submit(self, r: Request, now: float = 0.0) -> bool:
+        """False when SLO-aware admission control shed the request."""
+        return self.core.submit(r, now)
 
     def metrics(self, now: float) -> EngineMetrics:
         return self.core.metrics(now)
@@ -81,10 +82,13 @@ class Engine:
         _, finished = self.core.step(now)
         return finished
 
-    def drain_all(self) -> List[Request]:
-        """Pull every request (waiting + running) off this engine, resetting
-        running ones for re-execution elsewhere (KV is lost on failure)."""
-        return self.core.drain()
+    def drain_all(self, migrate: bool = False) -> List[Request]:
+        """Pull every request (waiting + running) off this engine.  Default:
+        running ones reset for re-execution elsewhere (KV lost on failure);
+        ``migrate=True`` marks their KV as travelling with the re-route, so
+        generation progress survives (graceful removal / orchestrated
+        failover)."""
+        return self.core.drain(migrate=migrate)
 
     # ------------------------------------------------------------------ delegation
     # Historical surface: scheduling state lives in the core, physical state

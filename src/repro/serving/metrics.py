@@ -33,6 +33,12 @@ class MetricsBus:
                 self._log[eid] = ms[-32:]
         return out
 
+    def forget(self, engine_id: int) -> None:
+        """Drop an engine's metric history (elastic scale-in): its stale
+        snapshots must not keep re-enrolling it with the HealthMonitor or
+        diluting the ElasticPolicy's pressure average."""
+        self._log.pop(engine_id, None)
+
 
 @dataclasses.dataclass
 class LatencyReport:
@@ -52,6 +58,9 @@ class LatencyReport:
     slo_attainment: float = 1.0
     goodput_tok_s: float = 0.0
     goodput_req_s: float = 0.0
+    # requests rejected by SLO-aware admission control; they count as SLO
+    # misses in `slo_attainment` (shedding must not launder attainment)
+    shed: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -59,16 +68,20 @@ class LatencyReport:
 
 def summarize(requests: Sequence[Request], horizon: Optional[float] = None) -> LatencyReport:
     done = [r for r in requests if r.finish_time is not None]
+    shed = [r for r in requests if r.was_shed]
     ttfts = [r.ttft for r in done if r.ttft is not None]
     tpots = [r.tpot for r in done if r.tpot is not None]
     if not done or not ttfts:
-        return LatencyReport(0, *([float("nan")] * 6), 0.0)
+        return LatencyReport(0, *([float("nan")] * 6), 0.0,
+                             slo_attainment=0.0 if shed else 1.0,
+                             shed=len(shed))
     t0 = min(r.arrival_time for r in done)
     t1 = horizon if horizon is not None else max(r.finish_time for r in done)
     span = max(t1 - t0, 1e-9)
     tokens = sum(r.generated for r in done)
     with_slo = [r for r in done if r.has_slo]
     met = [r for r in done if r.slo_met]
+    tracked = len(with_slo) + len(shed)
     return LatencyReport(
         n=len(done),
         mean_ttft=float(np.mean(ttfts)),
@@ -80,10 +93,11 @@ def summarize(requests: Sequence[Request], horizon: Optional[float] = None) -> L
         throughput_req_s=len(done) / span,
         preemptions=sum(r.preempted for r in done),
         wasted_tokens=sum(r.wasted_tokens for r in done),
-        slo_attainment=(sum(1 for r in with_slo if r.slo_met) / len(with_slo)
-                        if with_slo else 1.0),
+        slo_attainment=(sum(1 for r in with_slo if r.slo_met) / tracked
+                        if tracked else 1.0),
         goodput_tok_s=sum(r.generated for r in met) / span,
         goodput_req_s=len(met) / span,
+        shed=len(shed),
     )
 
 

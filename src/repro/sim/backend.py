@@ -61,5 +61,15 @@ class CostModelBackend:
             self.expert.moe_mult, self.expert.cross_frac, queue_len=queue_len,
             rep_factor=rep)
 
+    def est_iter_time(self, prefill_tokens: int, decode_batch: int,
+                      avg_ctx: float, queue_len: int) -> float:
+        """Admission-control hint: a STATIC estimate (moe_mult/cross_frac at
+        their placement-neutral defaults, no replication blow-up), so the
+        shed decision depends only on queue state + the calibrated model —
+        never on live expert-level state, which the serving twin cannot see.
+        That keeps SLO-aware shedding differential-parity-testable."""
+        return self.cost.iteration_time(prefill_tokens, decode_batch,
+                                        avg_ctx, queue_len=queue_len)
+
     def kv_usage(self, kv_tokens: int) -> float:
         return min(kv_tokens / self.kv_capacity, 1.0)

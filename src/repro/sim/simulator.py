@@ -34,9 +34,10 @@ from repro.core.prefix_cache import PrefixCache
 from repro.core.scheduler import SchedulerCore
 from repro.core.sjf import SJFQueue
 from repro.core.types import EngineMetrics, GimbalConfig, Request
+from repro.distributed.drill import DRILLS, DrillRunner
 from repro.models.config import ModelConfig
-from repro.core.slo import SLOTracker
-from repro.serving.metrics import (LatencyReport, MetricsBus, summarize,
+from repro.serving.cluster import Cluster
+from repro.serving.metrics import (LatencyReport, summarize,
                                    summarize_by_class, summarize_by_tenant)
 from repro.sim.backend import CostModelBackend
 from repro.sim.costmodel import CostModel, HardwareProfile, PROFILES
@@ -63,8 +64,9 @@ class SimEngine:
             gcfg, prefill_budget=prefill_budget, engine_id=engine_id,
             expert_level=expert_level, prefix_cache=prefix)
 
-    def submit(self, r: Request, now: float) -> None:
-        self.core.submit(r, now)
+    def submit(self, r: Request, now: float) -> bool:
+        """False when SLO-aware admission control shed the request."""
+        return self.core.submit(r, now)
 
     def metrics(self, now: float) -> EngineMetrics:
         return self.core.metrics(now)
@@ -85,8 +87,8 @@ class SimEngine:
     def num_active(self) -> int:
         return self.core.num_running()
 
-    def drain_all(self) -> List[Request]:
-        return self.core.drain()
+    def drain_all(self, migrate: bool = False) -> List[Request]:
+        return self.core.drain(migrate=migrate)
 
     @property
     def queue(self) -> SJFQueue:
@@ -138,10 +140,33 @@ class SimResult:
     # (req_id, engine_id) engine-assignment stream from the DispatchCore —
     # the engine-level parity oracle (tests/test_scheduler_parity.py)
     assignments: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    # --- fault-drill telemetry (drill= / health= / elastic= runs) ---
+    # (kind, engine_id) membership-change stream — the lifecycle parity oracle
+    lifecycle: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    fault_log: List[Dict] = dataclasses.field(default_factory=list)
+    n_shed: int = 0          # rejected by SLO-aware admission control
+    rerouted: int = 0        # orphan re-dispatches off failed/removed engines
+    # auto-detection latency: crash injection -> HealthMonitor declares dead
+    # (None: nothing crashed, or nothing was auto-detected)
+    detect_s: Optional[float] = None
+    # failover recovery: first failure -> last orphan finished or shed
+    recovery_s: Optional[float] = None
 
     @property
     def prefix_hit_rate(self) -> float:
         return self.prefix_hits / max(self.prefix_probed, 1)
+
+
+def _sync_clocks(cluster, t_engine: Dict[int, float], steps: Dict[int, int],
+                 now: float) -> None:
+    """After a lifecycle event (drill / auto-detection / autoscale): every
+    member engine's clock moves to at least ``now`` — re-routed orphans and
+    fresh engines must not be served in the past.  (Busy engines are already
+    past ``now``: the event-loop race only fires an event once no engine
+    iteration precedes it.)"""
+    for eid in cluster.engines:
+        t_engine[eid] = max(t_engine.get(eid, now), now)
+        steps.setdefault(eid, 0)
 
 
 def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
@@ -149,73 +174,166 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
              gcfg: Optional[GimbalConfig] = None, seed: int = 0,
              horizon: Optional[float] = None, prefill_budget: int = 2048,
              max_running: int = 256, metric_delay: float = 0.05,
-             kv_pool_tokens: int = 0, hot_boost: float = 8.0) -> SimResult:
+             kv_pool_tokens: int = 0, hot_boost: float = 8.0,
+             drill=None, health=None, elastic=None,
+             warmup_s: Optional[float] = None) -> SimResult:
     """Run one experiment: a trace against one variant (paper §V-A.7).
 
     ``hot_boost`` is the hot-expert-skew knob: how hot the synthetic prior's
     hot experts run (8.0 = the paper's Fig. 3 shape; the campaign's hotspot
-    cells raise it to stress replication)."""
+    cells raise it to stress replication).
+
+    Fault drills (the robustness axis): ``drill`` — a distributed/drill.py
+    ``Drill`` or a ``DRILLS`` name — injects timed lifecycle events into the
+    run; ``health`` (HealthConfig) arms heartbeat auto-detection, so a
+    silently crashed engine is failed by the monitor, not by the script;
+    ``elastic`` (ElasticPolicy) lets the cluster resize itself through the
+    same SimEngine factory drills use.  ``warmup_s`` is the expert-placement
+    warm-up charged to every added engine (None = time to move one engine's
+    full weights at the cost model's link bandwidth).  All lifecycle ops go
+    through the SAME serving ``Cluster`` API, so the lifecycle + assignment
+    streams stay parity-comparable with the live plane."""
     gcfg = gcfg or GimbalConfig()
     hwp = PROFILES[hw] if isinstance(hw, str) else hw
     flags = variant_flags(variant)
     # the same DispatchCore the serving Cluster drives: router + cluster-wide
     # PrefixDirectory + engine-assignment log (the dispatch parity oracle)
     dispatch = DispatchCore(variant, list(range(n_engines)), gcfg)
-    bus = MetricsBus(delay=metric_delay)
     # ONE cluster-wide expert level shared by every engine core (§V-A.1)
     experts = make_sim_expert_level(variant, cfg, n_engines, gcfg, seed=seed,
                                     hot_boost=hot_boost)
+    cost = CostModel(cfg, hwp, n_engines)
 
-    engines = [SimEngine(i, CostModel(cfg, hwp, n_engines), gcfg, flags["sjf"],
-                         experts, prefill_budget=prefill_budget,
+    def make_engine(i: int) -> SimEngine:
+        return SimEngine(i, cost, gcfg, flags["sjf"], experts,
+                         prefill_budget=prefill_budget,
                          max_running=max_running,
                          kv_pool_tokens=kv_pool_tokens)
-               for i in range(n_engines)]
-    for e in engines:
-        dispatch.attach_engine(e.engine_id, e.prefix)
-    reqs = sorted(requests, key=lambda r: r.arrival_time)
 
-    # event loop: arrivals interleaved with per-engine iterations
-    t_engine = [0.0] * n_engines
-    steps = [0] * n_engines
-    i_req = 0
-    finished: List[Request] = []
+    if warmup_s is None:
+        warmup_s = (cost.migration_time(cost.nonexpert_bytes
+                                        + cost.expert_bytes)
+                    if (drill is not None or elastic is not None) else 0.0)
+    cluster = Cluster([make_engine(i) for i in range(n_engines)], variant,
+                      gimbal_cfg=gcfg, bus_delay=metric_delay,
+                      expert_level=experts, dispatch_core=dispatch,
+                      health=health, elastic=elastic,
+                      engine_factory=make_engine, warmup_s=warmup_s)
+    bus = cluster.bus
+    reqs = sorted(requests, key=lambda r: r.arrival_time)
     n_total = len(reqs)
-    while len(finished) < n_total:
-        # next event: engine iteration or arrival
-        busy = [(t_engine[e.engine_id], e.engine_id) for e in engines
-                if not e.idle]
-        t_next_eng = min(busy)[0] if busy else float("inf")
-        t_next_arr = reqs[i_req].arrival_time if i_req < n_total else float("inf")
-        if t_next_arr <= t_next_eng:
+    t_last = reqs[-1].arrival_time if reqs else 0.0
+
+    runner = None
+    if drill is not None:
+        d = DRILLS[drill] if isinstance(drill, str) else drill
+        runner = DrillRunner(d, 0.0, t_last, warmup_s=warmup_s)
+    # control cadence: heartbeat synthesis + monitor checks + autoscaling
+    # (idle engines never iterate, so without synthesized heartbeats the
+    # monitor would false-positive exactly the engines that are healthy)
+    ctrl_dt = 0.0
+    if cluster.monitor is not None:
+        ctrl_dt = cluster.monitor.cfg.heartbeat_timeout / 2.0
+    elif cluster.elastic is not None:
+        ctrl_dt = 0.25
+    t_ctrl = ctrl_dt if ctrl_dt > 0 else float("inf")
+
+    # event loop: arrivals, drill events, control ticks and per-engine
+    # iterations raced on one clock (ties: arrival, drill, control, engine)
+    t_engine: Dict[int, float] = {eid: 0.0 for eid in cluster.engines}
+    steps: Dict[int, int] = {eid: 0 for eid in cluster.engines}
+    i_req = 0
+    finished = cluster.finished
+    inf = float("inf")
+    max_events = 1000 * max(n_total, 1) + 100_000
+    n_events = 0
+
+    def n_shed() -> int:
+        return sum(len(e.core.shed) for e in cluster._all_engines())
+
+    while (len(finished) + n_shed() < n_total
+           or (runner is not None and not runner.done)):
+        n_events += 1
+        if n_events > max_events:
+            raise RuntimeError(
+                f"simulation runaway after {max_events} events "
+                f"({len(finished)}/{n_total} finished)")
+        busy = [(max(t_engine[eid], cluster.ready_at(eid)), eid)
+                for eid, e in cluster.engines.items()
+                if e.healthy and not e.idle]
+        t_eng, eid_eng = min(busy) if busy else (inf, -1)
+        t_arr = reqs[i_req].arrival_time if i_req < n_total else inf
+        t_drill = runner.next_time() if runner is not None else inf
+        t_next = min(t_eng, t_arr, t_drill, t_ctrl)
+        if t_next == inf:
+            raise RuntimeError(
+                f"simulation stalled at {len(finished)}/{n_total} finished: "
+                "unserved requests remain but no engine, arrival, drill or "
+                "control event can make progress (a crash drill with no "
+                "HealthMonitor strands its engine's queue)")
+        if t_arr <= t_next:
             r = reqs[i_req]
             i_req += 1
-            eid = dispatch.dispatch(r, bus.snapshot(r.arrival_time),
-                                    r.arrival_time)
-            engines[eid].submit(r, r.arrival_time)
-            t_engine[eid] = max(t_engine[eid], r.arrival_time)
+            eid = cluster.submit(r, r.arrival_time)
+            t_engine[eid] = max(t_engine.get(eid, r.arrival_time),
+                                r.arrival_time)
             continue
-        eid = min(busy)[1]
-        eng = engines[eid]
-        now = t_engine[eid]
-        dt, done = eng.iterate(now)
-        t_engine[eid] = now + dt
-        steps[eid] += 1
+        if t_drill <= t_next:
+            runner.poll(cluster, t_drill)
+            _sync_clocks(cluster, t_engine, steps, t_drill)
+            continue
+        if t_ctrl <= t_next:
+            for e in list(cluster.engines.values()):
+                if e.healthy:           # heartbeat: idle + warming engines too
+                    bus.publish(e.metrics(t_ctrl))
+            cluster.health_check(t_ctrl)
+            cluster.autoscale(t_ctrl)
+            _sync_clocks(cluster, t_engine, steps, t_ctrl)
+            t_ctrl += ctrl_dt
+            continue
+        eng = cluster.engines[eid_eng]
+        dt, done = eng.iterate(t_eng)
+        t_engine[eid_eng] = t_eng + dt
+        steps[eid_eng] += 1
         finished.extend(done)
-        bus.publish(eng.metrics(t_engine[eid]))
+        bus.publish(eng.metrics(t_engine[eid_eng]))
 
-    hits = sum(e.prefix.hit_blocks for e in engines)
-    probed = sum(e.prefix.probed_blocks for e in engines)
-    slo = SLOTracker()
-    for e in engines:
-        slo.merge(e.core.slo)
+    everyone = cluster._all_engines()
+    shed_all = cluster.shed_requests()
+    hits = sum(e.prefix.hit_blocks for e in everyone)
+    probed = sum(e.prefix.probed_blocks for e in everyone)
+
+    # failover telemetry, from the injection record + the cluster fault log
+    detect_s = None
+    if runner is not None:
+        crashes = {e: t for t, act, e in runner.fired if act == "crash"}
+        for f in cluster.fault_log:
+            if (f["kind"] == "fail" and f.get("detected")
+                    and f["engine"] in crashes):
+                detect_s = f["t"] - crashes[f["engine"]]
+                break
+    recovery_s = None
+    fails = [f for f in cluster.fault_log if f["kind"] == "fail"]
+    if fails:
+        orphan_ids = {rid for f in fails for rid in f["orphans"]}
+        ends = [r.finish_time if r.finish_time is not None else r.shed_time
+                for r in list(finished) + shed_all if r.req_id in orphan_ids]
+        ends = [t for t in ends if t is not None]
+        if ends:
+            recovery_s = max(ends) - fails[0]["t"]
+
+    graded = list(finished) + shed_all
     return SimResult(
-        report=summarize(finished, horizon),
+        report=summarize(graded, horizon),
         prefix_hits=hits, prefix_probed=probed,
         moe_mult_final=experts.moe_mult, cross_frac_final=experts.cross_frac,
-        migrations=experts.migrations, per_engine_steps=steps,
+        migrations=experts.migrations,
+        per_engine_steps=[steps[eid] for eid in sorted(steps)],
         moe_mult_trajectory=list(getattr(experts, "factor_trail", [])),
-        report_by_class=summarize_by_class(finished, horizon),
-        preemptions=sum(e.preemptions for e in engines),
-        report_by_tenant=summarize_by_tenant(finished, horizon),
-        slo=slo.snapshot(), assignments=dispatch.assignment_log())
+        report_by_class=summarize_by_class(graded, horizon),
+        preemptions=sum(e.preemptions for e in everyone),
+        report_by_tenant=summarize_by_tenant(graded, horizon),
+        slo=cluster.slo_report(), assignments=dispatch.assignment_log(),
+        lifecycle=dispatch.lifecycle_log(), fault_log=list(cluster.fault_log),
+        n_shed=len(shed_all), rerouted=cluster.rerouted,
+        detect_s=detect_s, recovery_s=recovery_s)

@@ -63,3 +63,57 @@ def test_elastic_policy_respects_bounds():
     assert p.decide(hot) == 0          # already at max_engines
     p2 = ElasticPolicy(in_tokens=1000, sustain_checks=1, min_engines=1)
     assert p2.decide(snap(0.0, 0, load=0)) == 0   # already at min
+
+
+def test_monitor_auto_enrolls_unknown_engines():
+    """An engine the monitor was never told about (elastic add, or a bus
+    entry that predates the monitor) enrolls on its first heartbeat — it
+    must not be invisible to failure detection."""
+    m = HealthMonitor([0], HealthConfig(heartbeat_timeout=1.0,
+                                        suspect_strikes=1))
+    m.observe(snap(0.0, 0, 7), 0.0)
+    assert 7 in m.last_seen
+    # and from then on it is failure-detected like any other engine
+    m.observe(snap(3.0, 0), 3.0)
+    assert m.check(3.0) == [7]
+
+
+def test_mark_dead_suppresses_redetection():
+    """An orchestrated kill (drill event / manual fail_engine) records the
+    engine dead out-of-band, so the next check must NOT re-detect it and
+    trigger a second failover drain."""
+    m = HealthMonitor([0, 1], HealthConfig(heartbeat_timeout=1.0,
+                                           suspect_strikes=1))
+    m.observe(snap(0.0, 0, 1), 0.0)
+    m.mark_dead(1, 0.5)
+    m.observe(snap(5.0, 0), 5.0)       # engine 0 keeps heartbeating
+    assert m.check(5.0) == []          # silent: already handled
+    assert 1 in m.dead
+
+
+def test_elastic_policy_ignores_dead_engines_pressure():
+    """A dead engine's frozen zero-load metrics must not dilute per-engine
+    pressure and block scale-out exactly when the survivors are drowning."""
+    p = ElasticPolicy(out_tokens=300, sustain_checks=1, max_engines=8)
+    snapshot = {0: EngineMetrics(0, running_load=500, timestamp=0.0),
+                1: EngineMetrics(1, running_load=0, timestamp=0.0)}
+    # diluted average (250) would sit under the threshold; filtered it's 500
+    assert p.decide(snapshot, now=0.0, dead={1}, n_engines=2) == +1
+
+
+def test_elastic_policy_ignores_stale_snapshots():
+    p = ElasticPolicy(out_tokens=300, sustain_checks=1, max_engines=8,
+                      stale_after=1.0)
+    snapshot = {0: EngineMetrics(0, running_load=500, timestamp=9.5),
+                1: EngineMetrics(1, running_load=0, timestamp=2.0)}
+    assert p.decide(snapshot, now=10.0) == +1     # engine 1 too stale to count
+
+
+def test_elastic_policy_bounds_use_actual_pool_size():
+    """The max/min checks must compare against the real pool, not the
+    snapshot width (a warming engine has published nothing yet)."""
+    p = ElasticPolicy(out_tokens=1, sustain_checks=1, max_engines=2)
+    hot = snap(0.0, 0, load=100)       # snapshot sees 1, pool actually has 2
+    assert p.decide(hot, n_engines=2) == 0
+    p2 = ElasticPolicy(in_tokens=1000, sustain_checks=1, min_engines=2)
+    assert p2.decide(snap(0.0, 0, load=0), n_engines=2) == 0

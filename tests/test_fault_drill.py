@@ -1,0 +1,377 @@
+"""Fault-drill subsystem tests (distributed/drill.py + serving/cluster.py).
+
+Fast lane: a Cluster over SimEngines runs the REAL lifecycle code — the
+HealthMonitor fed from the MetricsBus (auto-detection), fail/restore/add/
+remove through DispatchCore, SLO-aware shedding in SchedulerCore — without
+JAX compiles.  The one slow test drives the same kill/restore drill through
+a cluster of real JAX Engines (satellite: finish-exactly-once on BOTH
+planes); byte-level cross-plane parity lives in test_scheduler_parity.py.
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core.gimbal import make_sim_expert_level
+from repro.core.types import GimbalConfig, Request
+from repro.distributed.drill import DRILLS, Drill, DrillEvent, run_drill
+from repro.distributed.fault import ElasticPolicy, HealthConfig
+from repro.models.config import ModelConfig
+from repro.serving.cluster import Cluster
+from repro.sim.costmodel import CostModel, PROFILES
+from repro.sim.simulator import SimEngine
+from repro.workloads.arrivals import flash_crowd_arrivals
+
+
+def tiny_moe():
+    return ModelConfig(name="t", family="moe", num_layers=2, d_model=32,
+                       num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                       vocab_size=64, num_experts=4, moe_top_k=2, moe_d_ff=32,
+                       capacity_factor=8.0, dtype="float32")
+
+
+def make_cluster(n=2, variant="combined", gcfg=None, health=None,
+                 elastic=None, with_factory=False, warmup_s=0.0,
+                 bus_delay=0.01, prefill_budget=256, max_running=8,
+                 kv_pool_tokens=4096):
+    gcfg = gcfg or GimbalConfig(tau=10_000)
+    cfg = tiny_moe()
+    level = make_sim_expert_level(variant, cfg, n, gcfg)
+    cost = CostModel(cfg, PROFILES["a100"], n)
+
+    def make_engine(i):
+        return SimEngine(i, cost, gcfg, sjf=True, expert_level=level,
+                         prefill_budget=prefill_budget,
+                         max_running=max_running,
+                         kv_pool_tokens=kv_pool_tokens)
+
+    engines = [make_engine(i) for i in range(n)]
+    return Cluster(engines, variant=variant, gimbal_cfg=gcfg,
+                   bus_delay=bus_delay, health=health, elastic=elastic,
+                   engine_factory=make_engine if with_factory else None,
+                   warmup_s=warmup_s)
+
+
+def req(rid, n_blocks=2, base=0, user=None, t=0.0, out=4):
+    tokens = np.arange(base, base + n_blocks * 16, dtype=np.int64) % 64
+    return Request(req_id=rid, prompt_len=len(tokens), max_new_tokens=out,
+                   arrival_time=t, user_id=user, prompt_tokens=tokens)
+
+
+def flash_trace(n=40, rps=40.0, seed=0, out=4, slo_ttft=None):
+    """Flash-crowd arrivals (the drill workload) with tiny-engine prompts."""
+    ts = flash_crowd_arrivals(np.random.default_rng(seed), n, rps)
+    trace = []
+    for i, t in enumerate(ts):
+        r = req(i, n_blocks=1 + i % 3, base=37 * i, t=float(t), out=out)
+        r.priority_class = "interactive" if i % 2 == 0 else "batch"
+        r.slo_ttft = slo_ttft
+        trace.append(r)
+    return trace
+
+
+# --- drill DSL ---------------------------------------------------------------
+
+def test_drill_registry_and_schedule():
+    assert set(DRILLS) == {"none", "kill", "kill_restore", "kill_migrate",
+                           "elastic"}
+    with pytest.raises(ValueError):
+        DrillEvent(0.5, "reboot")
+    with pytest.raises(ValueError):
+        DrillEvent(1.5, "kill")
+    d = Drill("x", (DrillEvent(0.75, "restore", 1), DrillEvent(0.25, "crash", 1)))
+    times = [t for t, _, _ in d.schedule(10.0, 20.0)]
+    assert times == [12.5, 17.5]                 # sorted, fraction-pinned
+    assert DRILLS["none"].schedule(0.0, 1.0) == []
+
+
+# --- auto-detection failover (the acceptance path) ---------------------------
+
+def test_crash_is_autodetected_and_failed_over():
+    """The 'kill' drill only flips healthy=False — NOTHING calls
+    fail_engine.  The HealthMonitor must notice the missed heartbeats on
+    the metrics bus and the cluster must fail the corpse over by itself."""
+    c = make_cluster(health=HealthConfig(heartbeat_timeout=0.1,
+                                         suspect_strikes=2))
+    trace = flash_trace(n=30, rps=30.0, seed=1)
+    runner = run_drill(c, trace, "kill", dt=0.01)
+    assert [a for _, a, _ in runner.fired] == ["crash"]
+
+    counts = Counter(r.req_id for r in c.finished)
+    assert sorted(counts) == list(range(30))
+    assert all(v == 1 for v in counts.values())   # exactly once, none lost
+    lifecycle = c.dispatch.lifecycle_log()
+    assert ("detect", 1) in lifecycle
+    assert ("fail:lost", 1) in lifecycle
+    assert lifecycle.index(("detect", 1)) < lifecycle.index(("fail:lost", 1))
+    # the failover was the monitor's doing, and the corpse left the pool
+    assert c.fault_log[0]["detected"] is True
+    assert not c.engines[1].healthy
+    assert 1 not in c.router.engine_ids
+
+
+def test_kill_restore_drill_finishes_exactly_once():
+    """The acceptance drill: silent crash mid flash crowd, auto-detected,
+    victim rejoins later — every request finishes exactly once."""
+    c = make_cluster(health=HealthConfig(heartbeat_timeout=0.1,
+                                         suspect_strikes=2))
+    trace = flash_trace(n=40, rps=40.0, seed=3)
+    runner = run_drill(c, trace, "kill_restore", dt=0.01)
+    assert [a for _, a, _ in runner.fired] == ["crash", "restore"]
+
+    counts = Counter(r.req_id for r in c.finished)
+    assert sorted(counts) == list(range(40))
+    assert all(v == 1 for v in counts.values())
+    lifecycle = c.dispatch.lifecycle_log()
+    assert lifecycle.index(("detect", 1)) < lifecycle.index(("fail:lost", 1)) \
+        < lifecycle.index(("restore", 1))
+    # re-routed orphans are the crash's fingerprint
+    assert c.rerouted == len(c.fault_log[0]["orphans"])
+    # the restored engine is a dispatch candidate again
+    assert c.engines[1].healthy and 1 in c.router.engine_ids
+
+
+def test_crash_without_monitor_stalls_loudly():
+    """No health monitor, silent crash: the corpse's queue can never drain.
+    run_drill must raise — not spin forever or quietly drop requests."""
+    c = make_cluster()                           # health=None
+    trace = flash_trace(n=12, rps=30.0, seed=4)
+    with pytest.raises(RuntimeError, match="did not drain"):
+        run_drill(c, trace, "kill", dt=0.01, max_steps=3000)
+
+
+# --- KV-lost vs KV-migrated re-routing ----------------------------------------
+
+def test_kv_lost_failover_resets_progress():
+    c = make_cluster(variant="rr")
+    r = req(0, out=50)
+    eid = c.submit(r, 0.0)
+    for k in range(10):
+        c.step(0.01 * k)
+    assert r.generated > 1 and r.first_token_time is not None
+    c.fail_engine(eid, 0.2, kv="lost")
+    # crash semantics: the KV is gone — progress resets, TTFT re-earned
+    assert r.generated == 0 and r.first_token_time is None
+    assert r.reroutes == 1
+    assert ("fail:lost", eid) in c.dispatch.lifecycle_log()
+    c.run_until_drained(t0=0.3, dt=0.05)
+    assert r.finish_time is not None and r.generated == 50
+
+
+def test_kv_migrated_failover_preserves_progress():
+    c = make_cluster(variant="rr")
+    r = req(0, out=50)
+    eid = c.submit(r, 0.0)
+    for k in range(10):
+        c.step(0.01 * k)
+    g0, ft0 = r.generated, r.first_token_time
+    assert g0 > 1
+    c.fail_engine(eid, 0.2, kv="migrated")
+    # orchestrated failover: pages travel with the re-route
+    assert r.generated == g0 and r.first_token_time == ft0
+    assert r.reroutes == 1
+    assert ("fail:migrated", eid) in c.dispatch.lifecycle_log()
+    c.run_until_drained(t0=0.3, dt=0.05)
+    assert r.finish_time is not None
+    assert r.generated == 50                    # resumed, not restarted
+    assert r.first_token_time == ft0            # TTFT survived the move
+
+
+def test_drain_migrate_unit():
+    """SchedulerCore.drain: the per-engine half of the failover contract."""
+    gcfg = GimbalConfig(tau=10_000)
+    c = make_cluster(n=2, gcfg=gcfg)
+    e, e2 = c.engines[0], c.engines[1]
+    r = req(0, out=20)
+    e.submit(r, 0.0)
+    e.step(0.0)
+    e.step(0.01)
+    g = r.generated
+    assert g >= 2
+    out = e.core.drain(migrate=True)
+    assert out == [r] and r.kv_migrated and r.engine_id is None
+    assert e.core.kv_tokens == 0 and e.core.num_running() == 0
+    e2.submit(r, 0.1)
+    assert r._cached == r.prompt_len            # no re-prefill charged
+    e2.step(0.1)                                # admit: resumes, no reset
+    assert r.generated == g
+    e2.step(0.2)                                # decode continues
+    assert r.generated == g + 1
+
+
+# --- elastic pool: add / remove / warm-up / autoscale -------------------------
+
+def test_elastic_drill_add_then_remove():
+    c = make_cluster(with_factory=True)
+    trace = flash_trace(n=30, rps=60.0, seed=2)
+    runner = run_drill(c, trace, "elastic", dt=0.01, warmup_s=0.05)
+    assert [a for _, a, _ in runner.fired] == ["add", "remove"]
+    lifecycle = c.dispatch.lifecycle_log()
+    assert ("attach", 2) in lifecycle and ("remove", 2) in lifecycle
+    assert len(c.engines) == 2                   # back to the base pool
+    assert [e.engine_id for e in c.retired] == [2]
+    counts = Counter(r.req_id for r in c.finished)
+    assert sorted(counts) == list(range(30))
+    assert all(v == 1 for v in counts.values())  # scale-in lost nothing
+
+
+def test_remove_engine_drains_gracefully_and_keeps_accounting():
+    c = make_cluster(variant="rr")
+    for i in range(8):
+        c.submit(req(i, base=64 * i, out=6), 0.0)
+    c.step(0.0)
+    n_orphans = c.remove_engine(1, 0.01)
+    assert n_orphans > 0 and c.rerouted == n_orphans
+    assert 1 not in c.engines and 1 not in c.router.engine_ids
+    assert 1 not in c.bus.snapshot(10.0)         # bus history forgotten
+    assert c.retired[0].engine_id == 1
+    assert ("remove", 1) in c.dispatch.lifecycle_log()
+    assert c.fault_log[0]["kind"] == "remove"
+    done = c.run_until_drained(t0=0.1, dt=0.05)
+    assert sorted(r.req_id for r in done) == list(range(8))
+
+
+def test_added_engine_warms_up_before_serving():
+    c = make_cluster(n=1, variant="rr", with_factory=True)
+    eid = c.next_engine_id()
+    c.add_engine(c.engine_factory(eid), now=0.0, warmup_s=0.5)
+    assert c.ready_at(eid) == 0.5
+    for i in range(6):
+        c.submit(req(i, base=100 * i), 0.0)      # rr: some land on the newcomer
+    now = 0.0
+    while now < 0.45:
+        c.step(now)
+        now += 0.05
+    assert c.engines[eid].core.steps == 0        # queued, not served
+    assert eid in c.bus.snapshot(0.5)            # but it heartbeats
+    done = c.run_until_drained(t0=0.5, dt=0.05)
+    assert len(done) == 6
+    assert c.engines[eid].core.steps > 0         # serving after warm-up
+
+
+def test_autoscale_out_under_pressure_then_back_in():
+    pol = ElasticPolicy(out_tokens=200, in_tokens=10, sustain_checks=2,
+                        min_engines=2, max_engines=4)
+    c = make_cluster(elastic=pol, with_factory=True)
+    for i in range(24):
+        c.submit(req(i, n_blocks=4, base=64 * i, out=8), 0.0)
+    sizes, now = [], 0.0
+    for _ in range(600):
+        c.step(now)
+        now += 0.02
+        sizes.append(len(c.engines))
+        if len(c.finished) == 24 and len(c.engines) == 2 and max(sizes) > 2:
+            break
+    assert max(sizes) >= 3                       # scaled out under backlog
+    assert len(c.engines) == 2                   # scaled back in when idle
+    lifecycle = c.dispatch.lifecycle_log()
+    assert any(k == "attach" and eid >= 2 for k, eid in lifecycle)
+    assert any(k == "remove" for k, _ in lifecycle)
+    assert len(c.finished) == 24                 # nothing lost either way
+
+
+# --- SLO-aware admission control (shedding) -----------------------------------
+
+def _shed_cfg(**kw):
+    return GimbalConfig(tau=10_000, enable_shedding=True, **kw)
+
+
+def test_shedding_rejects_unmeetable_ttft():
+    c = make_cluster(n=1, gcfg=_shed_cfg(shed_slack=1.0), prefill_budget=64)
+    e = c.engines[0]
+    r0 = req(0, n_blocks=4)
+    r0.slo_ttft = e.core.estimate_ttft(r0, 0.0) * 10
+    assert e.submit(r0, 0.0)                     # empty queue: meetable
+    for i in range(1, 30):                       # no-SLO filler backlog
+        assert e.submit(req(i, n_blocks=4), 0.0)
+    late = req(99, n_blocks=4)
+    late.slo_ttft = r0.slo_ttft / 10             # same budget, 30x the queue
+    assert not e.submit(late, 0.0)
+    assert late.was_shed and late in e.core.shed
+    assert late.engine_id is None                # never enqueued
+    assert any(k == "shed" and rid == 99 for k, _, rid in e.core.event_log())
+    # shed counts as an SLO miss in the tracker
+    cell = next(iter(e.core.slo.snapshot().values()))
+    assert cell["shed"] == 1 and cell["attainment"] == 0.0
+
+
+def test_shedding_downclass_demotes_instead_of_dropping():
+    c = make_cluster(n=1, gcfg=_shed_cfg(shed_slack=1.0,
+                                         shed_mode="downclass"),
+                     prefill_budget=64)
+    e = c.engines[0]
+    for i in range(30):
+        e.submit(req(i, n_blocks=4), 0.0)
+    late = req(99, n_blocks=4)
+    late.slo_ttft, late.priority_class = 1e-9, "interactive"
+    assert e.submit(late, 0.0)                   # kept, but demoted
+    assert late.priority_class == "batch" and not late.was_shed
+    assert any(k == "downclass" and rid == 99
+               for k, _, rid in e.core.event_log())
+    # already lowest class: nothing left to demote to — it sheds
+    floor = req(100, n_blocks=4)
+    floor.slo_ttft, floor.priority_class = 1e-9, "batch"
+    assert not e.submit(floor, 0.0)
+    assert floor.was_shed
+
+
+def test_migrated_orphan_never_shed():
+    c = make_cluster(n=1, gcfg=_shed_cfg(shed_slack=1.0), prefill_budget=64)
+    e = c.engines[0]
+    r = req(5)
+    r.slo_ttft = 1e-9                            # hopeless deadline...
+    r.first_token_time, r.generated, r.kv_migrated = 0.01, 3, True
+    assert e.submit(r, 1.0)                      # ...but it already has TTFT
+    assert not r.was_shed
+
+
+def test_cluster_report_counts_shed_as_misses():
+    c = make_cluster(gcfg=_shed_cfg(shed_slack=1.0), prefill_budget=64)
+    probe = req(0, n_blocks=4)
+    budget = c.engines[0].core.estimate_ttft(probe, 0.0) * 4
+    for i in range(40):
+        r = req(i, n_blocks=4, base=64 * i)
+        r.slo_ttft = budget
+        c.submit(r, 0.0)
+    shed = c.shed_requests()
+    assert 0 < len(shed) < 40                    # some admitted, some shed
+    c.run_until_drained(t0=0.0, dt=0.02)
+    assert len(c.finished) + len(shed) == 40     # every request accounted for
+    rep = c.report()
+    assert rep.shed == len(shed) and rep.n == len(c.finished)
+    # shed requests stay in the attainment denominator as misses
+    assert rep.slo_attainment <= len(c.finished) / 40
+    slo = c.slo_report()
+    assert sum(cell["shed"] for cell in slo.values()) == len(shed)
+    assert all(cell["attainment"] < 1.0 for cell in slo.values()
+               if cell["shed"] > 0)
+
+
+# --- the same drill through real JAX Engines (satellite: both planes) ---------
+
+@pytest.mark.slow
+def test_kill_restore_drill_real_engines_exactly_once():
+    import jax
+
+    from repro.models import model as M
+    from repro.serving.engine import Engine
+    cfg = tiny_moe()
+    params = M.init_params(jax.random.key(0), cfg)
+    engines = [Engine(i, cfg, params, variant="combined",
+                      gimbal_cfg=GimbalConfig(tau=10_000), max_slots=4,
+                      max_seq=64, prefill_budget=48, num_expert_devices=2)
+               for i in range(2)]
+    c = Cluster(engines, variant="combined", gimbal_cfg=GimbalConfig(tau=10_000),
+                bus_delay=0.01,
+                health=HealthConfig(heartbeat_timeout=0.5, suspect_strikes=2))
+    trace = flash_trace(n=16, rps=4.0, seed=7)
+    for r in trace:                              # fold into the tiny envelope
+        r.prompt_len = min(r.prompt_len, 32)
+        r.prompt_tokens = r.prompt_tokens[:r.prompt_len]
+    run_drill(c, trace, "kill_restore", dt=0.05)
+    counts = Counter(r.req_id for r in c.finished)
+    assert sorted(counts) == list(range(16))
+    assert all(v == 1 for v in counts.values())
+    lifecycle = c.dispatch.lifecycle_log()
+    assert ("detect", 1) in lifecycle and ("fail:lost", 1) in lifecycle \
+        and ("restore", 1) in lifecycle

@@ -244,20 +244,23 @@ def _session_trace(n=28, seed=23, n_users=4):
     return trace
 
 
-def _make_cluster_pair(variant, gcfg, n_engines=2):
+def _make_cluster_pair(variant, gcfg, n_engines=2, health=None,
+                       with_factory=False):
     """A serving Cluster of real JAX Engines and its cost-model twin, wired
     through the SAME DispatchCore construction (Cluster builds one per
-    plane from the variant)."""
+    plane from the variant).  ``health``/``with_factory`` arm the fault
+    machinery identically on both planes (drill parity tests)."""
     from repro.core.gimbal import make_sim_expert_level, variant_flags
     from repro.serving.cluster import Cluster
     cfg = tiny_moe()
     params = M.init_params(jax.random.key(0), cfg)
-    real = [Engine(i, cfg, params, variant=variant, gimbal_cfg=gcfg,
-                   max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
-                   prefill_budget=BUDGET, num_expert_devices=2)
-            for i in range(n_engines)]
-    sims = []
-    for i in range(n_engines):
+
+    def make_real(i):
+        return Engine(i, cfg, params, variant=variant, gimbal_cfg=gcfg,
+                      max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
+                      prefill_budget=BUDGET, num_expert_devices=2)
+
+    def make_sim(i):
         s = SimEngine(i, CostModel(cfg, PROFILES["a100"], 2), gcfg,
                       sjf=variant_flags(variant)["sjf"],
                       expert_level=make_sim_expert_level(variant, cfg, 2, gcfg),
@@ -269,9 +272,14 @@ def _make_cluster_pair(variant, gcfg, n_engines=2):
         # traces both would otherwise shift admission decisions
         s.core.backend.charge_prefix_hits = False
         s.core.backend.max_ctx_tokens = MAX_SEQ
-        sims.append(s)
-    return (Cluster(real, variant=variant, gimbal_cfg=gcfg),
-            Cluster(sims, variant=variant, gimbal_cfg=gcfg))
+        return s
+
+    real = [make_real(i) for i in range(n_engines)]
+    sims = [make_sim(i) for i in range(n_engines)]
+    return (Cluster(real, variant=variant, gimbal_cfg=gcfg, health=health,
+                    engine_factory=make_real if with_factory else None),
+            Cluster(sims, variant=variant, gimbal_cfg=gcfg, health=health,
+                    engine_factory=make_sim if with_factory else None))
 
 
 def _drive_cluster(cl, trace, n_steps=800, dt=0.05):
@@ -340,3 +348,57 @@ def test_metrics_come_from_the_core_path():
     me, ms = eng.core.metrics(1.0), sim.core.metrics(1.0)
     assert (me.num_running, me.num_waiting, me.running_load) == \
         (ms.num_running, ms.num_waiting, ms.running_load)
+
+
+# --- fault drills: lifecycle + assignment parity across planes ----------------
+
+def _stretched_session_trace(factor=10.0):
+    """The session trace with arrivals dilated so a kill_restore drill has
+    room for heartbeat detection (timeout x strikes) between the crash at
+    0.25 x window and the restore at 0.60 x window."""
+    trace = _session_trace()
+    for r in trace:
+        r.arrival_time *= factor
+    return trace
+
+
+@pytest.mark.parametrize("drill", ["kill_restore", "kill_migrate", "elastic"])
+def test_cluster_drill_lifecycle_and_assignment_parity(drill):
+    """The fault-drill oracle: the SAME drill script, driven through the
+    serving plane (real JAX Engines) and the cost-model plane (SimEngines)
+    on the same logical clock, must produce byte-identical lifecycle
+    streams (detect/fail/restore/attach/remove), byte-identical
+    (req_id, engine_id) assignment streams — re-routed orphans included —
+    and byte-identical per-engine scheduling event streams.  Every
+    lifecycle operation routes through the shared DispatchCore/
+    SchedulerCore, so any divergence is a real twin-asymmetry."""
+    from repro.distributed.drill import run_drill
+    from repro.distributed.fault import HealthConfig
+    gcfg = GimbalConfig(tau=10_000, theta_age=1.0)
+    health = HealthConfig(heartbeat_timeout=0.5, suspect_strikes=2)
+    cl_e, cl_s = _make_cluster_pair("combined", gcfg, health=health,
+                                    with_factory=(drill == "elastic"))
+    trace = _stretched_session_trace()
+    run_drill(cl_e, [copy.copy(r) for r in trace], drill, dt=0.05)
+    run_drill(cl_s, [copy.copy(r) for r in trace], drill, dt=0.05)
+
+    # the membership stream IS the parity oracle for the fault subsystem
+    life_e = cl_e.dispatch.lifecycle_log()
+    assert life_e == cl_s.dispatch.lifecycle_log()
+    if drill == "kill_restore":
+        # auto-detection fired identically on both planes
+        assert ("detect", 1) in life_e and ("fail:lost", 1) in life_e
+    elif drill == "kill_migrate":
+        assert ("fail:migrated", 1) in life_e
+    else:
+        assert ("attach", 2) in life_e and ("remove", 2) in life_e
+    # dispatch decisions (including orphan re-routes) match byte-for-byte
+    assert cl_e.dispatch.assignment_log() == cl_s.dispatch.assignment_log()
+    # and each surviving engine's admit/finish stream matches its twin's
+    for eid in cl_e.engines:
+        assert cl_e.engines[eid].core.event_log() == \
+            cl_s.engines[eid].core.event_log(), f"engine {eid} drifted"
+    # both planes finished the whole trace exactly once
+    for cl in (cl_e, cl_s):
+        ids = sorted(r.req_id for r in cl.finished)
+        assert ids == sorted(r.req_id for r in trace)
