@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import RPS_GRID, VARIANTS, ResultCache, emit
+from benchmarks.common import (RPS_GRID, VARIANTS, ResultCache,
+                               bench_decode_rows, emit)
 from repro.workloads.burstgpt import DISTRIBUTIONS
 
 
@@ -23,6 +24,7 @@ def run(quick: bool = False, cache: ResultCache | None = None):
                 "vs_vllm_pct": 100.0 * (r["throughput_tok_s"] - base) / base,
             })
     emit(rows, "bench_throughput")
+    emit(bench_decode_rows(), "BENCH_decode")
     worst = min(r["vs_vllm_pct"] for r in rows if r["variant"] == "gimbal")
     print(f"# throughput parity: worst gimbal-vs-vllm delta {worst:+.1f}% "
           f"(paper: comparable)")

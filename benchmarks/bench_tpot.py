@@ -5,7 +5,7 @@ from __future__ import annotations
 import argparse
 
 from benchmarks.common import (PAPER_RPS_LABELS, RPS_GRID, VARIANTS,
-                               ResultCache, emit)
+                               ResultCache, bench_decode_rows, emit)
 from repro.workloads.burstgpt import DISTRIBUTIONS
 
 
@@ -44,6 +44,13 @@ def run(quick: bool = False, cache: ResultCache | None = None):
                 "reduction_pct": overall})
     emit(rows, "bench_tpot")
     emit(agg, "bench_tpot_3seed")
+    # decode hot-path deltas (paged KV + fused decode vs the slot baseline)
+    decode = bench_decode_rows()
+    emit(decode, "BENCH_decode")
+    paged = next(r for r in decode if r["layout"] == "paged")
+    print(f"# decode hot path: paged {paged['tokens_per_s_vs_slot']:.2f}x "
+          f"tokens/s, {paged['max_concurrent_vs_slot']:.1f}x max concurrent "
+          f"at fixed cache memory vs slot")
     print(f"# TPOT mean reduction across distributions at top rate: "
           f"{overall:.1f}% (paper: 13.34%)")
     return rows, agg

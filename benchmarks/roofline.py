@@ -121,10 +121,37 @@ def to_markdown(rows: list) -> str:
     return "\n".join(out)
 
 
+def decode_hotpath_markdown() -> str | None:
+    """Achieved-vs-peak decode columns from the BENCH_decode artifact
+    (benchmarks/common.py::bench_decode_rows — emitted by bench_tpot /
+    bench_throughput): how close each KV layout drives HBM to the roofline
+    and what that costs/buys in tokens/s and concurrency."""
+    p = ART.parent / "BENCH_decode.json"
+    if not p.exists():
+        return None
+    rows = json.loads(p.read_text())
+    out = ["| layout | decode ms | tokens/s (x slot) | HBM GB/s | % peak | "
+           "max concurrent (x slot) |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['layout']} | {r['decode_step_ms']:.2f} | "
+            f"{r['tokens_per_s']:.0f} ({r['tokens_per_s_vs_slot']:.2f}x) | "
+            f"{r['achieved_hbm_gbs']:.0f} | "
+            f"{100 * r['hbm_frac_of_peak']:.0f}% | "
+            f"{r['max_concurrent_at_fixed_mem']} "
+            f"({r['max_concurrent_vs_slot']:.1f}x) |")
+    return "\n".join(out)
+
+
 def run(quick: bool = False, cache=None, suffix: str = ""):
     rows = analyse(suffix)
     ok = [r for r in rows if r["status"] == "OK"]
     print(to_markdown(rows))
+    dec = decode_hotpath_markdown()
+    if dec is not None:
+        print("\n# decode hot path: achieved vs peak HBM per KV layout")
+        print(dec)
     (ART.parent / f"roofline{suffix or ''}.json").write_text(json.dumps(rows, indent=1))
     if ok:
         worst = min(ok, key=lambda r: r["roofline_frac"])

@@ -56,7 +56,7 @@ from repro.core.sjf import SJFQueue
 from repro.core.slo import SLOTracker
 from repro.core.types import (PRIORITY_CLASSES, EngineMetrics, GimbalConfig,
                               Request)
-from repro.core.prefix_cache import PrefixCache
+from repro.core.prefix_cache import PrefixCache, block_hashes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +141,19 @@ class SchedulerCore:
         self.running: List[RunningSeq] = []
         self.ctx_tokens: Dict[int, int] = {}   # req_id -> resident KV tokens
         self.kv_tokens = 0                     # == sum(ctx_tokens.values())
+        # --- block-granular KV accounting (paged backends) -------------------
+        # When the backend declares kv_block_size > 1 (PagedKVCache), the pool
+        # gate switches from summed tokens to DISTINCT blocks: every per-
+        # request charge rounds up to whole blocks and full prompt blocks
+        # shared with an already-resident request are pinned (refcounted), not
+        # double-counted — mirroring the device pool's copy-on-write prefix
+        # sharing so admission reflects true block occupancy.  With
+        # kv_block_size == 1 (slot layout, cost-model default) every block
+        # path below is skipped and behaviour is byte-identical to before.
+        self.kv_blocks = 0                      # distinct resident blocks
+        self._shared_refs: Dict[int, int] = {}  # block hash -> pin count
+        self._req_blocks: Dict[int, int] = {}   # req_id -> total blocks held
+        self._req_shared: Dict[int, List[int]] = {}  # req_id -> pinned hashes
         self.steps = 0
         self.preemptions = 0
         self.hedged_away = 0          # requests the cluster hedged off this queue
@@ -216,9 +229,13 @@ class SchedulerCore:
     def metrics(self, now: float) -> EngineMetrics:
         """The single metrics path: Cluster/MetricsBus snapshots come from
         core accounting in both serving and simulation."""
+        bs = self.kv_block_size
+        # block mode: w_kv (Alg. 1) reads true block occupancy — rounded-up,
+        # shared-deduplicated — not the optimistic token sum
+        kv_held = self.kv_blocks * bs if bs > 1 else self.kv_tokens
         return EngineMetrics(
             engine_id=self.engine_id,
-            kv_usage=self.backend.kv_usage(self.kv_tokens),
+            kv_usage=self.backend.kv_usage(kv_held),
             running_load=self.kv_tokens + self.queue.waiting_tokens,
             num_running=len(self.running),
             num_waiting=len(self.queue),
@@ -261,22 +278,124 @@ class SchedulerCore:
         new = ctx + 1 if cap is None else min(ctx + 1, cap)
         self.ctx_tokens[req_id] = new
         self.kv_tokens += new - ctx
+        bs = self.kv_block_size
+        if bs > 1 and new != ctx:
+            # decode growth past a block boundary claims one more (private)
+            # block — the same point at which PagedKVCache.prepare_append
+            # pops a fresh block from the device free list
+            nb = -(-new // bs)
+            if nb > self._req_blocks.get(req_id, 0):
+                self.kv_blocks += nb - self._req_blocks[req_id]
+                self._req_blocks[req_id] = nb
+
+    # ------------------------------------------------------------ block accounting
+    @property
+    def kv_block_size(self) -> int:
+        """KV allocation granularity: 1 (token/slot accounting) unless the
+        backend declares a paged block size."""
+        return getattr(self.backend, "kv_block_size", 1)
+
+    def _prompt_hashes(self, r: Request) -> List[int]:
+        """Shareable full-prompt-block hashes for ``r`` — the exact set the
+        paged backend would pin: real tokens only (a KV-migrated sequence's
+        pages travelled with it, all private), clipped to the backend's
+        resident prompt length."""
+        if (r.prompt_tokens is None or getattr(r, "kv_migrated", False)):
+            return []
+        cap = self.backend.max_ctx_tokens
+        plen = r.prompt_len if cap is None else min(r.prompt_len, cap - 1)
+        toks = list(np.asarray(r.prompt_tokens).reshape(-1))[:plen]
+        return block_hashes(toks, self.kv_block_size)
+
+    def _demand_blocks(self, r: Request, refs: Optional[Dict[int, int]] = None
+                       ) -> int:
+        """NEW distinct blocks ``r`` would claim if admitted now: its rounded-
+        up demand minus the leading run of prompt blocks already resident
+        (prefix property: device reuse stops at the first absent block)."""
+        bs = self.kv_block_size
+        refs = self._shared_refs if refs is None else refs
+        m = 0
+        for h in self._prompt_hashes(r):
+            if h not in refs:
+                break
+            m += 1
+        return -(-self._kv_demand(r) // bs) - m
+
+    def _admit_blocks(self, r: Request) -> None:
+        """Pin ``r``'s shared prompt blocks (refcount++) and charge its
+        private remainder against the distinct-block pool."""
+        bs = self.kv_block_size
+        if bs <= 1:
+            return
+        hashes = self._prompt_hashes(r)
+        for h in hashes:
+            if h in self._shared_refs:
+                self._shared_refs[h] += 1
+            else:
+                self._shared_refs[h] = 1
+                self.kv_blocks += 1
+        total = -(-self._kv_demand(r) // bs)
+        self.kv_blocks += total - len(hashes)
+        self._req_blocks[r.req_id] = total
+        self._req_shared[r.req_id] = hashes
+
+    def _release_blocks(self, req_id: int) -> None:
+        """Undo ``_admit_blocks`` + decode growth: private blocks return to
+        the pool immediately; shared blocks only when their last pin drops
+        (matching the device pool's refcounted free)."""
+        if self.kv_block_size <= 1:
+            return
+        total = self._req_blocks.pop(req_id, 0)
+        hashes = self._req_shared.pop(req_id, [])
+        self.kv_blocks -= total - len(hashes)
+        for h in hashes:
+            self._shared_refs[h] -= 1
+            if self._shared_refs[h] == 0:
+                del self._shared_refs[h]
+                self.kv_blocks -= 1
 
     def _blocked(self, r: Request, n_admitted: int) -> bool:
-        """Admission blocked for ``r`` under the batch/KV-capacity limits."""
-        return (len(self.running) + n_admitted >= self.backend.max_concurrency
-                or self.kv_tokens + self._kv_demand(r) > self.backend.kv_capacity)
+        """Admission blocked for ``r`` under the batch/KV-capacity limits.
+        Block mode gates on distinct blocks — rounding every charge up while
+        not double-counting shared prefix blocks — because that, not the
+        token sum, is what exhausts a paged device pool."""
+        if len(self.running) + n_admitted >= self.backend.max_concurrency:
+            return True
+        bs = self.kv_block_size
+        if bs > 1:
+            return (self.kv_blocks + self._demand_blocks(r)
+                    > self.backend.kv_capacity // bs)
+        return self.kv_tokens + self._kv_demand(r) > self.backend.kv_capacity
 
     def _eviction_unblocks(self, r: Request, n_admitted: int) -> bool:
         """True iff evicting every preemptible victim would make ``r`` fit —
-        the feasibility gate before destroying any batch progress."""
+        the feasibility gate before destroying any batch progress.  Block
+        mode simulates the refcounted frees: a shared block only returns to
+        the pool if EVERY pinning victim is evicted, and ``r``'s own demand
+        is re-derived against the post-eviction resident set."""
         evictable = [v for _, v in eligible_victims(
             [(seq.handle, seq.r) for seq in self.running], r.rank, self.gcfg)]
+        run_after = len(self.running) - len(evictable) + n_admitted
+        if run_after >= self.backend.max_concurrency:
+            return False
+        bs = self.kv_block_size
+        if bs > 1:
+            refs = dict(self._shared_refs)
+            blocks_after = self.kv_blocks
+            for v in evictable:
+                total = self._req_blocks.get(v.req_id, 0)
+                hs = self._req_shared.get(v.req_id, [])
+                blocks_after -= total - len(hs)
+                for h in hs:
+                    refs[h] -= 1
+                    if refs[h] == 0:
+                        del refs[h]
+                        blocks_after -= 1
+            return (blocks_after + self._demand_blocks(r, refs)
+                    <= self.backend.kv_capacity // bs)
         kv_after = self.kv_tokens - sum(self.ctx_tokens[v.req_id]
                                         for v in evictable)
-        run_after = len(self.running) - len(evictable) + n_admitted
-        return (run_after < self.backend.max_concurrency
-                and kv_after + self._kv_demand(r) <= self.backend.kv_capacity)
+        return kv_after + self._kv_demand(r) <= self.backend.kv_capacity
 
     def _evict_for(self, rank: int) -> Optional[Request]:
         """Evict one running request preemptible by class ``rank``: KV seat
@@ -295,6 +414,7 @@ class SchedulerCore:
         seq = next(s for s in self.running if s.r is victim)
         self.running.remove(seq)
         self.kv_tokens -= self.ctx_tokens.pop(victim.req_id)
+        self._release_blocks(victim.req_id)
         self.backend.release(seq.handle, victim)
         reset_for_resume(victim)
         victim._cached = 0
@@ -353,6 +473,7 @@ class SchedulerCore:
             budget -= need
             admitted.append(r)
             self.kv_tokens += self._kv_demand(r)
+            self._admit_blocks(r)
             self.queue.remove(r)
             self.events.append(SchedEvent("admit", self.steps, r.req_id))
         return admitted, victims
@@ -427,6 +548,7 @@ class SchedulerCore:
                     finished.append(r)
                     self.running.remove(seq)
                     self.kv_tokens -= self.ctx_tokens.pop(r.req_id)
+                    self._release_blocks(r.req_id)
                     self.backend.release(seq.handle, r)
                     self.events.append(SchedEvent("finish", self.steps, r.req_id))
                     self.slo.observe(r)
@@ -462,6 +584,7 @@ class SchedulerCore:
                 r.kv_migrated = False
             r.engine_id = None
             self.kv_tokens -= self.ctx_tokens.pop(r.req_id, 0)
+            self._release_blocks(r.req_id)
             self.backend.release(seq.handle, r)
             out.append(r)
         self.running.clear()

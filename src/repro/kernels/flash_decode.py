@@ -35,25 +35,32 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0]                                 # (G, D)
-    k = k_ref[0, :, 0, :]                           # (BS, D)
-    v = v_ref[0, :, 0, :]                           # (BS, D)
     length = len_ref[0]
 
-    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T)  # (G, BS)
-    s = s * (q.shape[-1] ** -0.5)
-    if softcap > 0:
-        s = jnp.tanh(s / softcap) * softcap
-    jpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(jpos < length, s, NEG_INF)
+    # Skip fully-masked KV blocks entirely: no wasted flops past `length`, and
+    # a length-0 row leaves l at 0 so the output is exactly zero (with a finite
+    # NEG_INF mask an unguarded block would contribute exp(0)=1 everywhere and
+    # emit mean(v) instead).
+    @pl.when(si * block_s < length)
+    def _update():
+        q = q_ref[0, 0]                             # (G, D)
+        k = k_ref[0, :, 0, :]                       # (BS, D)
+        v = v_ref[0, :, 0, :]                       # (BS, D)
 
-    m_prev = m_ref[...]                              # (G, 1)
-    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
-    p = jnp.exp(s - m_new)                           # (G, BS)
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v.astype(jnp.float32))
-    m_ref[...] = m_new
+        s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T)  # (G, BS)
+        s = s * (q.shape[-1] ** -0.5)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        jpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(jpos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # (G, BS)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v.astype(jnp.float32))
+        m_ref[...] = m_new
 
     @pl.when(si == n_s - 1)
     def _finish():
@@ -97,4 +104,110 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, qg, k, v)
+    return out.reshape(b, hq, d)
+
+
+def _paged_kernel(bt_ref, len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, acc_ref,
+                  *, block_s: int, softcap: float, quantized: bool):
+    bi = pl.program_id(0)
+    si = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[bi]
+
+    @pl.when(si * block_s < length)
+    def _update():
+        q = q_ref[0, 0]                             # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (BS, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            blk = bt_ref[bi, si]                    # physical page id
+            k = k * ks_ref[blk]
+            v = v * vs_ref[blk]
+
+        s = jnp.dot(q.astype(jnp.float32), k.T)     # (G, BS)
+        s = s * (q.shape[-1] ** -0.5)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        jpos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(jpos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # (G, BS)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+        m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       block_tables: jax.Array, lengths: jax.Array, *,
+                       k_scale: jax.Array = None, v_scale: jax.Array = None,
+                       softcap: float = 0.0,
+                       interpret: bool = False) -> jax.Array:
+    """Block-table-indexed flash decode over a paged KV pool.
+
+    q: (B, Hq, D); k_pages, v_pages: (P, BS, Hkv, D) global page pool;
+    block_tables: (B, NB) int32 physical page per logical block; lengths: (B,)
+    valid tokens per row.  Optional per-page int8 scales (P,) f32 dequantize
+    pages in-kernel.  Returns (B, Hq, D).
+
+    The block table and lengths ride in as scalar-prefetch operands
+    (pltpu.PrefetchScalarGridSpec), so the k/v BlockSpec index maps select the
+    PHYSICAL page for grid step (b, h, si) — the standard TPU paged-attention
+    trick: the DMA engine chases the indirection, not the compute loop.
+    Fully-masked pages are skipped (pl.when on `si*BS < length`)."""
+    b, hq, d = q.shape
+    _, bs, hkv, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    quantized = k_scale is not None
+    ks = k_scale if quantized else jnp.zeros((1,), jnp.float32)
+    vs = v_scale if quantized else jnp.zeros((1,), jnp.float32)
+
+    def q_map(bi, hi, si, bt, ln, ks_, vs_):
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, si, bt, ln, ks_, vs_):
+        return (bt[bi, si], 0, hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), q_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+            pl.BlockSpec((1, bs, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),         # m
+            pltpu.VMEM((g, 1), jnp.float32),         # l
+            pltpu.VMEM((g, d), jnp.float32),         # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, block_s=bs, softcap=softcap,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, lengths, ks, vs, qg, k_pages, v_pages)
     return out.reshape(b, hq, d)

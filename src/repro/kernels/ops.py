@@ -11,9 +11,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.kernels.moe_gemm import moe_gemm
-from repro.kernels.topk_router import topk_router
+from repro.kernels.topk_router import topk_router, topk_router_replicated
 
 
 def on_tpu() -> bool:
@@ -45,5 +45,26 @@ def route_pallas(logits: jax.Array, k: int, interpret=None):
     return topk_router(logits, k, interpret=auto_interpret(interpret))
 
 
-__all__ = ["moe_gemm", "flash_decode", "topk_router", "expert_ffn_pallas",
-           "decode_attention_pallas", "route_pallas", "on_tpu"]
+def route_replicated_pallas(logits: jax.Array, k: int, replica_slots, replica_count,
+                            num_slots: int, interpret=None):
+    """Replica-aware fused router (gates, logical ids, physical slots, per-slot
+    capacity positions) — the routing half of the fused MoE decode step."""
+    return topk_router_replicated(logits, k, replica_slots, replica_count,
+                                  num_slots, interpret=auto_interpret(interpret))
+
+
+def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array, block_tables: jax.Array,
+                                  lengths: jax.Array, *, k_scale=None,
+                                  v_scale=None, softcap: float = 0.0,
+                                  interpret=None) -> jax.Array:
+    """(B, Hq, D) x (P, BS, Hkv, D) pool + (B, NB) block tables -> (B, Hq, D)."""
+    return flash_decode_paged(q, k_pages, v_pages, block_tables, lengths,
+                              k_scale=k_scale, v_scale=v_scale, softcap=softcap,
+                              interpret=auto_interpret(interpret))
+
+
+__all__ = ["moe_gemm", "flash_decode", "flash_decode_paged", "topk_router",
+           "topk_router_replicated", "expert_ffn_pallas",
+           "decode_attention_pallas", "paged_decode_attention_pallas",
+           "route_pallas", "route_replicated_pallas", "on_tpu"]

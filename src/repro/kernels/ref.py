@@ -35,8 +35,35 @@ def ref_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     mask = jnp.arange(s)[None, :] < lengths[:, None]          # (B, S)
     scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
     wts = jax.nn.softmax(scores, axis=-1)
+    # length-0 rows have an all -inf score row (softmax -> NaN); the kernel
+    # contract is zeros there (its accumulator never fires), so match it.
+    wts = jnp.where(lengths[:, None, None, None] > 0, wts, 0.0)
     out = jnp.einsum("bhgs,bshd->bhgd", wts, v.astype(jnp.float32))
     return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def ref_flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                           block_tables: jax.Array, lengths: jax.Array,
+                           softcap: float = 0.0,
+                           k_scale: jax.Array = None,
+                           v_scale: jax.Array = None) -> jax.Array:
+    """Paged single-token GQA decode attention (block-table indexed).
+    q: (B, Hq, D); k_pages, v_pages: (P, BS, Hkv, D) global page pool;
+    block_tables: (B, NB) int32 physical page per logical block (page 0 is the
+    reserved garbage page); lengths: (B,) valid KV length.  Optional
+    per-page int8 scales k_scale/v_scale: (P,) f32.  Returns (B, Hq, D)."""
+    b = q.shape[0]
+    p_, bs, hkv, d = k_pages.shape
+    nb = block_tables.shape[1]
+    k = k_pages[block_tables].astype(jnp.float32)     # (B, NB, BS, Hkv, D)
+    v = v_pages[block_tables].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[block_tables][:, :, None, None, None]
+    if v_scale is not None:
+        v = v * v_scale[block_tables][:, :, None, None, None]
+    k = k.reshape(b, nb * bs, hkv, d)
+    v = v.reshape(b, nb * bs, hkv, d)
+    return ref_flash_decode(q, k, v, lengths, softcap)
 
 
 def ref_topk_router_replicated(logits: jax.Array, k: int,

@@ -240,6 +240,91 @@ def gqa_decode(params: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     return out, {"k": k, "v": v}
 
 
+def _paged_append_int8(pages, scales, phys, off, new):
+    """Append one token per row into int8 pages with per-page scales.
+    pages: (P, BS, Hkv, D) int8; scales: (P,) f32; phys/off: (B,) page id /
+    in-page offset; new: (B, Hkv, D) f32.  The scale update is MONOTONE
+    (never shrinks), so when the new token fits the old scale the requantize
+    round-trips existing entries exactly (round(q*s/s) == q)."""
+    blk = pages[phys].astype(jnp.float32) * scales[phys][:, None, None, None]
+    blk = jax.vmap(
+        lambda c, t, o: jax.lax.dynamic_update_slice(c, t[None], (o, 0, 0))
+    )(blk, new.astype(jnp.float32), off)
+    amax = jnp.max(jnp.abs(blk), axis=(1, 2, 3))
+    new_scale = jnp.maximum(scales[phys], jnp.maximum(amax, 1e-12) / 127.0)
+    q = jnp.clip(jnp.round(blk / new_scale[:, None, None, None]),
+                 -127, 127).astype(jnp.int8)
+    return pages.at[phys].set(q), scales.at[phys].set(new_scale)
+
+
+def gqa_decode_paged(params: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                     block_tables: jax.Array, lengths: jax.Array, local: bool,
+                     use_kernel: bool = False):
+    """One-token decode against a paged KV pool (one layer's pages).
+
+    x: (B,1,d); cache: {"k": (P,BS,Hkv,D), "v": ..., optional "k_scale"/
+    "v_scale": (P,) f32 for int8 pages}; block_tables: (B,NB) physical page per
+    logical block (page 0 = reserved garbage page — free rows write there);
+    lengths: (B,) tokens resident = write position.  Returns (out, new_cache).
+
+    The host guarantees (PagedKVCache.prepare_append) that active rows' tail
+    pages are private (copy-on-write) and allocated; inactive rows carry
+    lengths=0 and all-zero table rows, so their scatter lands in the garbage
+    page and their (discarded) output attends only to it."""
+    q, k_new, v_new = _qkv(params, cfg, x)
+    q = apply_rope(q, lengths[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, lengths[:, None], cfg.rope_theta)
+
+    b = x.shape[0]
+    bs_blk = cache["k"].shape[1]
+    nb = block_tables.shape[1]
+    bidx = lengths // bs_blk
+    off = lengths % bs_blk
+    phys = block_tables[jnp.arange(b), bidx]                  # (B,)
+    quantized = "k_scale" in cache
+
+    new_cache = dict(cache)
+    if quantized:
+        new_cache["k"], new_cache["k_scale"] = _paged_append_int8(
+            cache["k"], cache["k_scale"], phys, off, k_new[:, 0])
+        new_cache["v"], new_cache["v_scale"] = _paged_append_int8(
+            cache["v"], cache["v_scale"], phys, off, v_new[:, 0])
+    else:
+        new_cache["k"] = cache["k"].at[phys, off].set(
+            k_new[:, 0].astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[phys, off].set(
+            v_new[:, 0].astype(cache["v"].dtype))
+
+    windowed = local and cfg.sliding_window > 0
+    if use_kernel and not windowed:
+        from repro.kernels.flash_decode import flash_decode_paged
+        from repro.kernels.ops import auto_interpret
+        o = flash_decode_paged(
+            q[:, 0], new_cache["k"], new_cache["v"], block_tables, lengths + 1,
+            k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"),
+            softcap=float(cfg.attn_logit_softcap),
+            interpret=auto_interpret(None))
+        out = o[:, None].astype(x.dtype)
+    else:
+        kb = new_cache["k"][block_tables]                     # (B,NB,BS,Hkv,D)
+        vb = new_cache["v"][block_tables]
+        if quantized:
+            kb = kb.astype(jnp.float32) \
+                * new_cache["k_scale"][block_tables][..., None, None, None]
+            vb = vb.astype(jnp.float32) \
+                * new_cache["v_scale"][block_tables][..., None, None, None]
+        kb = kb.reshape(b, nb * bs_blk, cache["k"].shape[2], cache["k"].shape[3])
+        vb = vb.reshape(b, nb * bs_blk, cache["v"].shape[2], cache["v"].shape[3])
+        j = jnp.arange(nb * bs_blk)[None, :]
+        mask = j <= lengths[:, None]
+        if windowed:
+            mask &= j > (lengths[:, None] - cfg.sliding_window)
+        out = _sdpa(cfg, q, kb.astype(q.dtype), vb.astype(q.dtype),
+                    mask[:, None, :])
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, new_cache
+
+
 def _gqa_decode_seqsharded(cfg: ModelConfig, q, k_new, v_new, cache, cache_pos,
                            local: bool, ctx):
     """Flash-decode with the KV cache sharded over the model axis on the SEQ

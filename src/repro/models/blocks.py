@@ -118,6 +118,40 @@ def attn_block_decode(p: dict, cfg: ModelConfig, x, cache, cache_pos, is_local,
     return x, new_cache, aux
 
 
+def attn_block_decode_paged(p: dict, cfg: ModelConfig, x, cache, block_tables,
+                            lengths, is_local, is_moe_layer: bool, placement,
+                            dispatch_mode: str, stats: bool,
+                            use_kernel: bool = False):
+    """attn_block_decode against one layer's paged KV pool (GQA only;
+    PagedKVCache rejects other families up front)."""
+    h = rms_norm(x, p["attn_norm"]["scale"], cfg.norm_eps)
+    if (cfg.sliding_window > 0 and cfg.local_global_period > 0
+            and not isinstance(is_local, bool)):
+        a_local, c_local = attn.gqa_decode_paged(p["attn"], cfg, h, cache,
+                                                 block_tables, lengths, True,
+                                                 use_kernel)
+        a_glob, c_glob = attn.gqa_decode_paged(p["attn"], cfg, h, cache,
+                                               block_tables, lengths, False,
+                                               use_kernel)
+        a = jnp.where(is_local, a_local, a_glob)
+        new_cache = jax.tree.map(lambda l, g: jnp.where(is_local, l, g),
+                                 c_local, c_glob)
+    else:
+        local = is_local if isinstance(is_local, bool) else False
+        a, new_cache = attn.gqa_decode_paged(p["attn"], cfg, h, cache,
+                                             block_tables, lengths, local,
+                                             use_kernel)
+    x = x + a
+    h = rms_norm(x, p["ffn_norm"]["scale"], cfg.norm_eps)
+    aux = {}
+    if is_moe_layer:
+        y, aux = _moe(p["moe"], cfg, h, placement, dispatch_mode, stats)
+    else:
+        y = ffn_apply(p["ffn"], h)
+    x = x + y
+    return x, new_cache, aux
+
+
 # --- apply: mamba block --------------------------------------------------------------
 
 def mamba_block_full(p: dict, cfg: ModelConfig, x, cache):

@@ -512,3 +512,38 @@ def decode_step(params, cfg: ModelConfig, token, cache, cache_pos, **kw):
     logits, new_cache, aux = forward(params, cfg, token, cache=cache,
                                      cache_pos=cache_pos, decode=True, **kw)
     return logits[:, -1], new_cache, aux
+
+
+def decode_step_paged(params, cfg: ModelConfig, token, pages, block_tables,
+                      lengths, *, placements=None, dispatch_mode: str = "dense",
+                      stats: bool = False, use_kernel: bool = False):
+    """One decode step against a paged KV pool (serving/kvcache.PagedKVCache).
+
+    token: (B, 1) int32; pages: per-layer page pytree with leading L
+    ({"k": (L,P,BS,Hkv,D), "v": ..., optional "k_scale"/"v_scale": (L,P)});
+    block_tables: (B, NB) int32; lengths: (B,) tokens resident per row.
+    Homogeneous GQA stacks only (no prologue / hybrid / MLA — PagedKVCache
+    enforces this at construction).  Returns (logits (B,V), new_pages, aux)."""
+    x = embed_apply(params["embed"], token)
+    flags = local_flags(cfg)
+    is_moe = cfg.is_moe
+    pstack = _placement_stack(cfg, placements)
+
+    def body(x, xs):
+        p, c, flag, inv = xs
+        plc = (ExpertPlacement.from_slot_map(inv, cfg.num_experts)
+               if inv is not None else None)
+        x, newc, aux = B.attn_block_decode_paged(
+            p, cfg, x, c, block_tables, lengths, flag, is_moe, plc,
+            dispatch_mode, stats, use_kernel)
+        return _seq_constraint(x), (newc, aux)
+
+    x, (new_pages, auxs) = jax.lax.scan(
+        body, x, (params["blocks"], pages, flags, pstack), unroll=_unroll())
+    aux = _agg_aux(auxs)
+
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    unemb = params["embed"] if cfg.tie_embeddings else params["embed"]
+    w = unemb["embedding"] if cfg.tie_embeddings else unemb["unembedding"]
+    logits = unembed_apply({"unembedding": w}, x, cfg.final_logit_softcap)
+    return logits[:, -1], new_pages, aux

@@ -179,12 +179,21 @@ def moe_apply(params: dict, cfg: ModelConfig, x: jax.Array,
 
     logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["w_router"])
     probs = router_probs(logits)                                   # logical space
-    gates, expert_ids = top_k_gating(probs, k)                     # (T,k) logical
-    slot_idx = placement.dispatch_slots(expert_ids)                # physical slots
     ns = placement.num_slots                                       # S = E + R
-
     cap = _capacity(cfg, t)
-    pos, keep = _dispatch_tables(slot_idx, gates, ns, cap)
+    if dispatch_mode == "fused":
+        # Fused router -> dispatch: the Pallas kernel produces gates, logical
+        # ids, physical slots AND per-slot capacity positions in one pass
+        # (VMEM count scratch carried across token blocks) — same contract as
+        # top_k_gating + dispatch_slots + _dispatch_tables.
+        from repro.kernels.ops import route_replicated_pallas
+        gates, expert_ids, slot_idx, pos = route_replicated_pallas(
+            logits, k, placement.replica_slots, placement.replica_count, ns)
+        keep = pos < cap
+    else:
+        gates, expert_ids = top_k_gating(probs, k)                 # (T,k) logical
+        slot_idx = placement.dispatch_slots(expert_ids)            # physical slots
+        pos, keep = _dispatch_tables(slot_idx, gates, ns, cap)
     gates = gates.astype(x.dtype)
 
     if dispatch_mode == "dense":
@@ -196,7 +205,7 @@ def moe_apply(params: dict, cfg: ModelConfig, x: jax.Array,
         xe = jnp.einsum("tec,td->ecd", dispatch, xf)
         ye = _expert_ffn(params, xe)
         y = jnp.einsum("tec,ecd->td", combine, ye)
-    elif dispatch_mode == "gather":
+    elif dispatch_mode in ("gather", "fused"):
         # token-index table (S, C): which token sits in slot (s, c)
         tok_ids = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None], (t, k)).reshape(-1)
         slot_flat = jnp.where(keep, slot_idx, ns).reshape(-1)      # dropped -> slot S (overflow row)
@@ -207,7 +216,11 @@ def moe_apply(params: dict, cfg: ModelConfig, x: jax.Array,
         valid = table < t
         xe = jnp.where(valid[..., None],
                        jnp.take(xf, jnp.minimum(table, t - 1), axis=0), 0).astype(x.dtype)
-        ye = _expert_ffn(params, xe)
+        if dispatch_mode == "fused":
+            from repro.kernels.ops import expert_ffn_pallas
+            ye = expert_ffn_pallas(params, xe)                     # 3x moe_gemm
+        else:
+            ye = _expert_ffn(params, xe)
         # combine: scatter-add expert outputs back, weighted by gate
         gate_tbl = jnp.zeros((ns + 1, cap), x.dtype).at[slot_flat, pos_flat].set(
             (gates * keep).reshape(-1), mode="drop")[:ns]

@@ -1,8 +1,10 @@
 from repro.serving.engine import Engine
 from repro.serving.cluster import Cluster
-from repro.serving.kvcache import BlockLedger, SlotKVCache, write_slot
+from repro.serving.kvcache import (BlockLedger, PagedKVCache, SlotKVCache,
+                                   write_slot)
 from repro.serving.metrics import LatencyReport, MetricsBus, summarize
 from repro.serving.prefix_cache import PrefixCache
 
-__all__ = ["Engine", "Cluster", "BlockLedger", "SlotKVCache", "write_slot",
-           "LatencyReport", "MetricsBus", "summarize", "PrefixCache"]
+__all__ = ["Engine", "Cluster", "BlockLedger", "PagedKVCache", "SlotKVCache",
+           "write_slot", "LatencyReport", "MetricsBus", "summarize",
+           "PrefixCache"]

@@ -22,7 +22,7 @@ from repro.core.eplb import ExpertRebalancer
 from repro.core.types import Request
 from repro.models import config as mcfg
 from repro.models import model as M
-from repro.serving.kvcache import SlotKVCache, write_slot
+from repro.serving.kvcache import PagedKVCache, SlotKVCache, write_slot
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -47,17 +47,34 @@ class JaxBackend:
     def __init__(self, model_cfg: mcfg.ModelConfig, params: Any, *,
                  max_slots: int = 4, max_seq: int = 256,
                  eos_id: Optional[int] = None, dispatch_mode: str = "dense",
-                 rebalancer: Optional[ExpertRebalancer] = None):
+                 rebalancer: Optional[ExpertRebalancer] = None,
+                 kv_layout: str = "slot", kv_block_size: int = 16,
+                 kv_quant: Optional[str] = None, use_kernels: bool = False):
+        assert kv_layout in ("slot", "paged")
+        assert kv_quant in (None, "int8")
         self.cfg = model_cfg
         self.params = params
         self.rebalancer = rebalancer
-        self.kv = SlotKVCache(model_cfg, max_slots, max_seq)
+        self.kv_layout = kv_layout
+        self.use_kernels = use_kernels
+        if kv_layout == "paged":
+            self.kv = PagedKVCache(model_cfg, max_slots, max_seq,
+                                   block_size=kv_block_size,
+                                   quantize=(kv_quant == "int8"))
+            # block-granular accounting: SchedulerCore rounds every per-request
+            # charge up to whole blocks and gates admission on distinct blocks
+            self.kv_block_size = kv_block_size
+            kv_capacity = self.kv.capacity_tokens
+        else:
+            self.kv = SlotKVCache(model_cfg, max_slots, max_seq)
+            self.kv_block_size = 1
+            kv_capacity = max_slots * max_seq
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.dispatch_mode = dispatch_mode
         self.max_concurrency = max_slots
-        self.kv_capacity = max_slots * max_seq
+        self.kv_capacity = kv_capacity
         # prompts are physically truncated to the slot length (see start()),
         # so a request can never hold more than one slot's worth of KV — the
         # core's pool accounting must match or over-long prompts starve
@@ -71,6 +88,7 @@ class JaxBackend:
         self._n_scan = model_cfg.num_moe_layers()
         self._applied_map: Optional[np.ndarray] = None   # slot -> logical
         self._jit_decode = jax.jit(self._decode_fn)
+        self._jit_decode_paged = jax.jit(self._decode_paged_fn)
         # One compiled prefill per BUCKETED length: prompts are padded to the
         # next power-of-two bucket and the jit cache is keyed on that bucket,
         # so repeated prefills of previously-unseen lengths inside a bucket
@@ -105,6 +123,15 @@ class JaxBackend:
                              placements=placements, stats=stats,
                              dispatch_mode=self.dispatch_mode)
 
+    def _decode_paged_fn(self, params, tokens, pages, block_tables, lengths,
+                         placements):
+        stats = self.cfg.is_moe and self.rebalancer is not None
+        return M.decode_step_paged(params, self.cfg, tokens, pages,
+                                   block_tables, lengths,
+                                   placements=placements, stats=stats,
+                                   dispatch_mode=self.dispatch_mode,
+                                   use_kernel=self.use_kernels)
+
     def _make_prefill(self, plen: int):
         @jax.jit
         def fn(params, tokens, slot_cache, placements):
@@ -121,14 +148,21 @@ class JaxBackend:
     def start(self, r: Request, now: float
               ) -> Tuple[int, Optional[np.ndarray]]:
         self._sync_placement()
-        slot = self.kv.alloc()
-        assert slot is not None, "SchedulerCore admitted past slot capacity"
         plen = min(r.prompt_len, self.max_seq - 1)
         if r.prompt_tokens is not None:
             toks = np.asarray(r.prompt_tokens, np.int32).reshape(-1)[:plen]
         else:
             rng = np.random.default_rng(r.req_id)
             toks = rng.integers(0, self.cfg.vocab_size, plen).astype(np.int32)
+        if self.kv_layout == "paged":
+            # share only when the core's block accounting also shared: real
+            # tokens, not a migrated sequence (its KV travelled, all private)
+            share = (r.prompt_tokens is not None
+                     and not getattr(r, "kv_migrated", False))
+            slot = self.kv.alloc(plen, toks.tolist() if share else None)
+        else:
+            slot = self.kv.alloc()
+        assert slot is not None, "SchedulerCore admitted past slot capacity"
         bl = _bucket(plen)
         padded = np.zeros(bl, np.int32)
         padded[:plen] = toks
@@ -136,7 +170,11 @@ class JaxBackend:
         fn = self._prefill_for_bucket(bl)
         logits, slot_cache, aux = fn(self.params, jnp.asarray(padded)[None],
                                      slot_cache, self._placements())
-        self.kv.cache = write_slot(self.kv.cache, slot_cache, slot)
+        if self.kv_layout == "paged":
+            self.kv.write_prefill(slot, slot_cache)
+        else:
+            self.kv.cache = write_slot(self.kv.cache, slot_cache, slot,
+                                       self.kv.write_axes)
         self.slot_req[slot] = r
         self.kv.slot_len[slot] = plen
         self.slot_last_token[slot] = int(jnp.argmax(logits[0, plen - 1]))
@@ -150,9 +188,17 @@ class JaxBackend:
         self._sync_placement()
         tokens = jnp.asarray(self.slot_last_token)[:, None]
         pos = self.kv.positions()
-        logits, new_cache, aux = self._jit_decode(
-            self.params, tokens, self.kv.cache, pos, self._placements())
-        self.kv.cache = new_cache
+        if self.kv_layout == "paged":
+            for slot, _r in active:
+                self.kv.prepare_append(slot)     # alloc/CoW tail pages
+            logits, new_pages, aux = self._jit_decode_paged(
+                self.params, tokens, self.kv.pages, self.kv.device_tables(),
+                pos, self._placements())
+            self.kv.pages = new_pages
+        else:
+            logits, new_cache, aux = self._jit_decode(
+                self.params, tokens, self.kv.cache, pos, self._placements())
+            self.kv.cache = new_cache
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         eos: Set[int] = set()
         rows = []
@@ -190,6 +236,11 @@ class JaxBackend:
                                              avg_ctx, queue_len=queue_len)
 
     def kv_usage(self, kv_tokens: int) -> float:
+        if self.kv_layout == "paged":
+            # identical formula to CostModelBackend so ScoredRouter's w_kv term
+            # is plane-invariant AND reads true block occupancy (the core
+            # passes blocks_used * block_size as kv_tokens in block mode)
+            return min(kv_tokens / max(self.kv_capacity, 1), 1.0)
         return self.kv.usage()
 
     def apply_placement(self, new_map: np.ndarray) -> None:

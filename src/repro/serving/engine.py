@@ -40,7 +40,9 @@ class Engine:
                  variant: str = "gimbal", gimbal_cfg: Optional[GimbalConfig] = None,
                  max_slots: int = 4, max_seq: int = 256, prefill_budget: int = 512,
                  num_expert_devices: int = 4, eos_id: Optional[int] = None,
-                 dispatch_mode: str = "dense", expert_level: Any = _PRIVATE):
+                 dispatch_mode: str = "dense", expert_level: Any = _PRIVATE,
+                 kv_layout: str = "slot", kv_block_size: int = 16,
+                 kv_quant: Optional[str] = None, use_kernels: bool = False):
         """``expert_level`` should be the ONE ClusterExpertLevel shared by
         every engine of a cluster (core/gimbal.make_cluster_expert_level):
         experts are EP-sharded across all engines' devices (§V-A.1), so
@@ -60,7 +62,10 @@ class Engine:
         self.backend = JaxBackend(model_cfg, params, max_slots=max_slots,
                                   max_seq=max_seq, eos_id=eos_id,
                                   dispatch_mode=dispatch_mode,
-                                  rebalancer=rebalancer)
+                                  rebalancer=rebalancer,
+                                  kv_layout=kv_layout,
+                                  kv_block_size=kv_block_size,
+                                  kv_quant=kv_quant, use_kernels=use_kernels)
         self.core = SchedulerCore(self.backend, make_queue(variant, self.gcfg),
                                   self.gcfg, prefill_budget=prefill_budget,
                                   engine_id=engine_id, expert_level=rebalancer)

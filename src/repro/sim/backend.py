@@ -26,7 +26,7 @@ class CostModelBackend:
 
     def __init__(self, cost: CostModel, expert_level, *,
                  max_running: int = 256, kv_pool_tokens: int = 0,
-                 max_ctx_tokens: Optional[int] = None):
+                 max_ctx_tokens: Optional[int] = None, kv_block_size: int = 1):
         self.cost = cost
         self.expert = expert_level          # shared across engines (EP-sharded)
         self.max_concurrency = max_running
@@ -36,6 +36,10 @@ class CostModelBackend:
         # constraint).  Set it to the live engine's slot length when twinning
         # a JaxBackend so finish-at-cap decisions stay in parity.
         self.max_ctx_tokens = max_ctx_tokens
+        # KV allocation granularity: > 1 switches SchedulerCore to distinct-
+        # block accounting (set it to the paged JaxBackend's block size when
+        # twinning one, so admission/preemption streams stay in parity)
+        self.kv_block_size = kv_block_size
 
     # ------------------------------------------------------------------ Backend protocol
     def start(self, r: Request, now: float

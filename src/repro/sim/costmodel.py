@@ -49,10 +49,16 @@ class CostModel:
     owns one device; MoE experts are EP-sharded across all `g` devices, so
     expert imbalance couples engines (§V-A.1)."""
 
-    def __init__(self, cfg: ModelConfig, hw: HardwareProfile, g: int):
+    def __init__(self, cfg: ModelConfig, hw: HardwareProfile, g: int,
+                 block_size: int = 1):
         self.cfg = cfg
         self.hw = hw
         self.g = max(g, 1)
+        # paged-KV allocation granularity: decode reads whole blocks, so with
+        # block_size > 1 the per-sequence context rounds UP to a block
+        # multiple in the memory term (the paging overhead the slot layout
+        # avoids by construction; 1 = exact-token reads, the historical model)
+        self.block_size = max(block_size, 1)
         itemsize = 2  # bf16 serving
         self.active_params = cfg.active_params()
         self.total_params = cfg.total_params()
@@ -119,6 +125,8 @@ class CostModel:
             return 0.0
         weight_bytes = self.nonexpert_bytes \
             + (self.expert_bytes * rep_factor / self.g) * moe_mult
+        if self.block_size > 1:     # paged reads are block-granular
+            avg_ctx = -(-avg_ctx // self.block_size) * self.block_size
         kv = batch * avg_ctx * self.kv_bytes_tok
         t_mem = (weight_bytes + kv) / (self.hw.hbm_bw * self.hw.bw_eff)
         t_comp = self._compute_time(2.0 * self.active_params * batch, moe_mult, batch)

@@ -50,12 +50,13 @@ class SimEngine:
     def __init__(self, engine_id: int, cost: CostModel, gcfg: GimbalConfig,
                  sjf: bool, expert_level, *, prefill_budget: int = 2048,
                  max_running: int = 256, kv_pool_tokens: int = 0,
-                 max_ctx_tokens=None):
+                 max_ctx_tokens=None, kv_block_size: int = 1):
         self.engine_id = engine_id
         self.backend = CostModelBackend(cost, expert_level,
                                         max_running=max_running,
                                         kv_pool_tokens=kv_pool_tokens,
-                                        max_ctx_tokens=max_ctx_tokens)
+                                        max_ctx_tokens=max_ctx_tokens,
+                                        kv_block_size=kv_block_size)
         # vLLM's prefix cache IS the KV block pool: bound + LRU-churn it
         prefix = PrefixCache(
             capacity_blocks=max(self.backend.kv_capacity // 16, 256))

@@ -148,3 +148,163 @@ def test_topk_router_replicated_splits_hot_expert():
     s = np.asarray(slots).reshape(-1)
     assert set(s) == {1, 3} and (s == 1).sum() == (s == 3).sum() == t // 2
     assert np.asarray(pos).max() == t // 2 - 1        # per-slot counters
+
+
+# --- paged flash-decode (ISSUE 8) ---------------------------------------------
+
+def _paged_case(seed, b, hq, hkv, d, bs, nb, dtype=jnp.float32):
+    """Random page pool + non-aliasing random block tables (page 0 reserved
+    as the garbage page, like PagedKVCache)."""
+    pool = b * nb + 1
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k_pages = jax.random.normal(ks[1], (pool, bs, hkv, d), dtype)
+    v_pages = jax.random.normal(ks[2], (pool, bs, hkv, d), dtype)
+    perm = np.random.default_rng(seed).permutation(pool - 1)[:b * nb] + 1
+    tables = jnp.asarray(perm.reshape(b, nb), jnp.int32)
+    return q, k_pages, v_pages, tables
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,bs,nb", [(4, 4, 2, 16, 16, 4),
+                                              (2, 8, 8, 32, 32, 3),
+                                              (3, 4, 1, 64, 16, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_paged_matches_ref(b, hq, hkv, d, bs, nb, dtype):
+    """Ragged lengths, zero-length rows and the exactly-full case in one
+    sweep: lengths cover {0, mid-block, block boundary, nb*bs}."""
+    from repro.kernels.flash_decode import flash_decode_paged
+    q, kp, vp, bt = _paged_case(b * 31 + nb, b, hq, hkv, d, bs, nb, dtype)
+    lens = np.linspace(0, nb * bs, b).astype(np.int32)
+    lens[b // 2] = bs                                     # a block boundary
+    lengths = jnp.asarray(lens)
+    out = flash_decode_paged(q, kp, vp, bt, lengths, interpret=True)
+    want = ref.ref_flash_decode_paged(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+    # a zero-length row attends to nothing and must be exactly zero
+    assert (np.asarray(out, np.float32)[np.asarray(lengths) == 0] == 0).all()
+
+
+def test_flash_decode_paged_single_block_pages():
+    from repro.kernels.flash_decode import flash_decode_paged
+    q, kp, vp, bt = _paged_case(7, 3, 4, 2, 16, 16, 1)
+    lengths = jnp.asarray([16, 1, 9], jnp.int32)
+    out = flash_decode_paged(q, kp, vp, bt, lengths, interpret=True)
+    want = ref.ref_flash_decode_paged(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_paged_softcap():
+    from repro.kernels.flash_decode import flash_decode_paged
+    q, kp, vp, bt = _paged_case(11, 2, 4, 2, 16, 16, 4)
+    lengths = jnp.asarray([40, 64], jnp.int32)
+    out = flash_decode_paged(q * 10, kp, vp, bt, lengths, softcap=30.0,
+                             interpret=True)
+    want = ref.ref_flash_decode_paged(q * 10, kp, vp, bt, lengths, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_paged_matches_contiguous_slot_kernel():
+    """The paged kernel over a shuffled pool == the slot kernel over the
+    gathered contiguous cache (same math, different layout)."""
+    from repro.kernels.flash_decode import flash_decode_paged
+    b, hq, hkv, d, bs, nb = 3, 4, 2, 32, 16, 4
+    q, kp, vp, bt = _paged_case(13, b, hq, hkv, d, bs, nb)
+    lengths = jnp.asarray([0, 17, 64], jnp.int32)
+    paged = flash_decode_paged(q, kp, vp, bt, lengths, interpret=True)
+    k = kp[bt].reshape(b, nb * bs, hkv, d)
+    v = vp[bt].reshape(b, nb * bs, hkv, d)
+    slot = flash_decode(q, k, v, lengths, block_s=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(slot),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_zero_length_rows_are_zero():
+    """The slot kernel's length-0 contract (an inactive decode slot): output
+    exactly zero, not softmax(-inf) garbage or mean(v)."""
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (4, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (4, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (4, 64, 2, 16), jnp.float32)
+    lengths = jnp.asarray([0, 5, 0, 64], jnp.int32)
+    out = np.asarray(flash_decode(q, k, v, lengths, block_s=16, interpret=True))
+    assert (out[[0, 2]] == 0).all()
+    want = np.asarray(ref.ref_flash_decode(q, k, v, lengths))
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+def _int8_pages(pages):
+    from repro.training.compression import quantize_int8
+    P = pages.shape[0]
+    q, scale = jax.vmap(quantize_int8)(pages.reshape(P, -1))
+    return q.reshape(pages.shape), scale.reshape(P)
+
+
+def test_flash_decode_paged_int8_matches_ref_and_bounds_drift():
+    """int8 KV: the kernel's in-flight dequant matches the reference on the
+    same quantized pages (tight), and the quantization itself stays within
+    the documented drift bound of full-precision attention (loose)."""
+    from repro.kernels.flash_decode import flash_decode_paged
+    q, kp, vp, bt = _paged_case(17, 4, 8, 2, 32, 16, 4)
+    lengths = jnp.asarray([0, 16, 33, 64], jnp.int32)
+    kq, ksc = _int8_pages(kp)
+    vq, vsc = _int8_pages(vp)
+    out = flash_decode_paged(q, kq, vq, bt, lengths, k_scale=ksc, v_scale=vsc,
+                             interpret=True)
+    want = ref.ref_flash_decode_paged(q, kq, vq, bt, lengths,
+                                      k_scale=ksc, v_scale=vsc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    fp = ref.ref_flash_decode_paged(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fp),
+                               rtol=5e-2, atol=5e-2)
+
+
+# --- fused router -> dispatch -> expert-FFN decode step -----------------------
+
+def test_moe_apply_fused_matches_dense():
+    """dispatch_mode='fused' (Pallas replica-aware router + gather dispatch +
+    grouped-GEMM expert FFN) is numerically the dense one-hot einsum path,
+    with identical expert choices — under a replicated placement."""
+    from repro.models.config import ModelConfig
+    from repro.models.moe import ExpertPlacement, moe_apply
+    cfg = ModelConfig(name="t", family="moe", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                      vocab_size=64, num_experts=4, moe_top_k=2, moe_d_ff=32,
+                      capacity_factor=8.0, dtype="float32")
+    rng = np.random.default_rng(19)
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    params = {
+        "w_router": jnp.asarray(rng.normal(size=(d, e)), jnp.float32),
+        "w_gate": jnp.asarray(rng.normal(size=(e, d, f)) * 0.1, jnp.float32),
+        "w_up": jnp.asarray(rng.normal(size=(e, d, f)) * 0.1, jnp.float32),
+        "w_down": jnp.asarray(rng.normal(size=(e, f, d)) * 0.1, jnp.float32),
+    }
+    x = jnp.asarray(rng.normal(size=(2, 8, d)), jnp.float32)
+    # identity placement: fused vs the dense one-hot einsum
+    y_d, aux_d = moe_apply(params, cfg, x, None, "dense", return_stats=True)
+    y_f, aux_f = moe_apply(params, cfg, x, None, "fused", return_stats=True)
+    np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_d),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(aux_f["expert_ids"]),
+                                  np.asarray(aux_d["expert_ids"]))
+    # replicated placement (expert 1 in two slots): fused vs gather over the
+    # slot-gathered weights, the layout apply_placement produces
+    inv = np.array([0, 1, 2, 3, 1], np.int32)
+    plc = ExpertPlacement.from_slot_map(inv, e)
+    slot_params = dict(params)
+    for n in ("w_gate", "w_up", "w_down"):
+        slot_params[n] = params[n][inv]
+    y_g, aux_g = moe_apply(slot_params, cfg, x, plc, "gather",
+                           return_stats=True)
+    y_f2, aux_f2 = moe_apply(slot_params, cfg, x, plc, "fused",
+                             return_stats=True)
+    np.testing.assert_allclose(np.asarray(y_f2), np.asarray(y_g),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(aux_f2["expert_ids"]),
+                                  np.asarray(aux_g["expert_ids"]))
+    # replication is numerics-invariant too
+    np.testing.assert_allclose(np.asarray(y_f2), np.asarray(y_d),
+                               rtol=1e-5, atol=1e-5)
