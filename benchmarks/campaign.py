@@ -28,7 +28,10 @@ transcripts (real shared prefixes), the sticky workload the engine-level
 dispatch axis is measured on.
 Variant axis: the paper's five ablations plus ``gimbal_p`` (gimbal with
 preemptive priority scheduling, the beyond-paper mixed-tenant mode),
-``shed`` (gimbal with SLO-aware admission control — load shedding) and the
+``shed`` (gimbal with SLO-aware admission control — load shedding), ``srpt``
+(gimbal ranking by ORACLE-predicted remaining work with largest-remaining
+victim selection — core/predictor.py; the prediction-error sweep lives in
+benchmarks/bench_predictor.py) and the
 engine-level dispatch ladder ``rr``/``prefix``/``kv``/``sticky``/``combined``
 (core/dispatch.py; SJF + EDR held fixed, only the dispatch rule varies).
 Fault axis: ``fault:<drill>`` runs the cell under a timed fault drill
@@ -69,7 +72,7 @@ N_ENGINES = 2
 KV_POOL = 60_000
 MMPP_BURSTINESS = 4.0           # benchmarks/common.py calibration
 CAMPAIGN_VARIANTS = ("vllm", "dplb", "sjfs", "edr", "eplb", "gimbal",
-                     "gimbal+rep", "gimbal_p", "shed",
+                     "gimbal+rep", "gimbal_p", "shed", "srpt",
                      "rr", "prefix", "kv", "sticky", "combined")
 # vocabulary for sess:<suite> session-transcript token draws (the value only
 # shapes block-hash identity, not cost-model time) and the transcript cap:
@@ -182,7 +185,8 @@ MATRICES: Dict[str, Matrix] = {
     # variants, the kill_restore drill, resume path) in seconds
     "smoke": Matrix(
         name="smoke",
-        variants=("vllm", "gimbal_p", "gimbal+rep", "shed", "combined"),
+        variants=("vllm", "gimbal_p", "gimbal+rep", "shed", "srpt",
+                  "combined"),
         workloads=("mix:chat_vs_batch", "bgpt:random", "sess:chat_vs_batch"),
         arrivals=("mmpp", "flash"),
         rps=(10.0,),
@@ -262,6 +266,13 @@ def run_cell(cell: Dict) -> Dict:
     elif variant == "shed":
         variant, gcfg = "gimbal", GimbalConfig(tau=TAU, enable_shedding=True,
                                                shed_slack=SHED_SLACK)
+    elif variant == "srpt":
+        # oracle-predicted remaining-work ranking + largest-remaining victim
+        # selection (core/predictor.py); benchmarks/bench_predictor.py sweeps
+        # the noisy/histogram predictors against this endpoint
+        variant, gcfg = "gimbal", GimbalConfig(
+            tau=TAU, predictor="oracle", enable_preemption=True,
+            victim_policy="largest_remaining")
     fault = cell.get("fault", "none")
     drill = fault if fault != "none" else None
     # faulted cells run with auto-detection armed: the drill only crashes the

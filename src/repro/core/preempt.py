@@ -13,14 +13,21 @@ Policies (GimbalConfig.victim_policy):
   * lowest_class  — evict the least-urgent class first, ties by fewest
     generated tokens
   * lru_slot      — evict the candidate admitted longest ago (oldest slot)
+  * largest_remaining — evict the seat holding the MOST predicted-remaining
+    work (SRPT's dual: free the seat that would occupy it longest; needs a
+    core/predictor.py predictor — falls back to fewest_tokens without one)
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, TYPE_CHECKING
 
 from repro.core.types import GimbalConfig, Request
 
-VICTIM_POLICIES = ("fewest_tokens", "lowest_class", "lru_slot")
+if TYPE_CHECKING:
+    from repro.core.predictor import LengthPredictor
+
+VICTIM_POLICIES = ("fewest_tokens", "lowest_class", "lru_slot",
+                   "largest_remaining")
 
 
 def eligible_victims(running: Sequence[Tuple[object, Request]],
@@ -36,12 +43,15 @@ def eligible_victims(running: Sequence[Tuple[object, Request]],
 def select_victim(running: Sequence[Tuple[object, Request]],
                   incoming_rank: int,
                   cfg: GimbalConfig,
-                  admit_order: Optional[Sequence[float]] = None):
+                  admit_order: Optional[Sequence[float]] = None,
+                  predictor: Optional["LengthPredictor"] = None):
     """Pick the (handle, request) pair to evict, or None if nothing is
     preemptible.  `running` pairs an opaque handle (engine slot index, sim
     list position, ...) with the running request; `admit_order` optionally
     supplies a per-candidate admission timestamp for the lru_slot policy
-    (defaults to arrival_time)."""
+    (defaults to arrival_time); `predictor` feeds the largest_remaining
+    policy (without one it degrades to fewest_tokens, the cheapest-recompute
+    default, rather than guessing)."""
     policy = cfg.victim_policy
     if policy not in VICTIM_POLICIES:
         # validate before the no-candidates early-out so a typo'd policy
@@ -55,10 +65,17 @@ def select_victim(running: Sequence[Tuple[object, Request]],
         admit = {id(r): t for (_, r), t in zip(running, admit_order)}
     else:
         admit = {id(r): r.arrival_time for _, r in running}
+    if policy == "largest_remaining" and predictor is None:
+        policy = "fewest_tokens"
     if policy == "fewest_tokens":
         key = lambda hr: (hr[1].generated, -hr[1].rank, hr[1].req_id)
     elif policy == "lowest_class":
         key = lambda hr: (-hr[1].rank, hr[1].generated, hr[1].req_id)
+    elif policy == "largest_remaining":
+        # most predicted-remaining work first; class, then fewest generated
+        # (cheapest recompute) break ties, id last for determinism
+        key = lambda hr: (-predictor.remaining(hr[1]), -hr[1].rank,
+                          hr[1].generated, hr[1].req_id)
     else:  # lru_slot: oldest admission first
         key = lambda hr: (admit[id(hr[1])], hr[1].req_id)
     return min(cands, key=key)

@@ -50,9 +50,10 @@ from typing import Dict, List, Optional, Protocol, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.predictor import make_predictor
 from repro.core.preempt import (eligible_victims, reset_for_resume,
                                 select_victim)
-from repro.core.sjf import SJFQueue
+from repro.core.sjf import SJFQueue, order_key
 from repro.core.slo import SLOTracker
 from repro.core.types import (PRIORITY_CLASSES, EngineMetrics, GimbalConfig,
                               Request)
@@ -154,6 +155,15 @@ class SchedulerCore:
         self._shared_refs: Dict[int, int] = {}  # block hash -> pin count
         self._req_blocks: Dict[int, int] = {}   # req_id -> total blocks held
         self._req_shared: Dict[int, List[int]] = {}  # req_id -> pinned hashes
+        # output-length predictor (core/predictor.py): built from the shared
+        # GimbalConfig so both planes construct identical instances, attached
+        # to the queue so SJF ranks by predicted remaining work (SRPT), and
+        # fed every finish event below so the histogram predictor learns
+        # from a stream that is byte-identical across planes
+        self.predictor = make_predictor(self.gcfg.predictor,
+                                        seed=self.gcfg.predictor_seed)
+        if self.predictor is not None:
+            self.queue.predictor = self.predictor
         self.steps = 0
         self.preemptions = 0
         self.hedged_away = 0          # requests the cluster hedged off this queue
@@ -169,13 +179,28 @@ class SchedulerCore:
 
     # ------------------------------------------------------------------ intake
     def estimate_ttft(self, r: Request, now: float) -> float:
-        """Admission-control TTFT estimate: the prefill backlog ahead of
-        ``r`` (queue waiting tokens + its own prompt) worked off in chunked-
-        prefill iterations, each dated by the backend's calibrated cost
-        model.  Deliberately conservative-simple — a queue-depth × service-
-        rate product, not a schedule simulation — and a pure function of
-        core state, so the serving and sim planes decide identically."""
-        tokens_ahead = self.queue.waiting_tokens + r.prompt_len
+        """Admission-control TTFT estimate, a pure function of core state so
+        the serving and sim planes decide identically.
+
+        Without a predictor: the WHOLE queue's waiting tokens + ``r``'s own
+        prompt, worked off in chunked-prefill iterations each dated by the
+        backend's calibrated cost model.  Deliberately conservative-simple —
+        a queue-depth × service-rate product that ignores queue discipline,
+        which is why ``shed_slack`` historically needed to sit well above 1
+        to compensate.
+
+        With a predictor: only the backlog actually RANKED AHEAD of ``r``
+        under the live queue ordering (order_key: aging, class, predicted-
+        remaining work) counts — under SJF/SRPT a small interactive request
+        does not wait behind the large batch prompts it outranks.  The
+        sharper estimate is what lets shedding run at ``shed_slack = 1.0``."""
+        if self.predictor is not None:
+            k = order_key(r, now, self.gcfg, self.predictor)
+            tokens_ahead = r.prompt_len + sum(
+                w.prompt_len for w in self.queue
+                if order_key(w, now, self.gcfg, self.predictor) < k)
+        else:
+            tokens_ahead = self.queue.waiting_tokens + r.prompt_len
         chunk = max(self.prefill_budget, 1)
         iters = -(-tokens_ahead // chunk)       # ceil
         avg_ctx = (float(np.mean(list(self.ctx_tokens.values())))
@@ -407,7 +432,8 @@ class SchedulerCore:
         win a freed seat straight back from the request it was evicted for."""
         pick = select_victim([(seq.handle, seq.r) for seq in self.running],
                              rank, self.gcfg,
-                             admit_order=[seq.admit_time for seq in self.running])
+                             admit_order=[seq.admit_time for seq in self.running],
+                             predictor=self.predictor)
         if pick is None:
             return None
         _, victim = pick
@@ -552,6 +578,8 @@ class SchedulerCore:
                     self.backend.release(seq.handle, r)
                     self.events.append(SchedEvent("finish", self.steps, r.req_id))
                     self.slo.observe(r)
+                    if self.predictor is not None:
+                        self.predictor.observe(r)   # histogram EMA update
         # expert-level tick (Alg. 3 lines 6-9)
         self.steps += 1
         if self.expert is not None:

@@ -145,3 +145,12 @@ class GimbalConfig:
     enable_shedding: bool = False
     shed_slack: float = 1.0          # shed when est TTFT > slack × remaining budget
     shed_mode: str = "reject"        # "reject" | "downclass" (demote to lowest class)
+    # output-length prediction (beyond-paper, SRPT-style request scheduling):
+    # a core/predictor.py spec — "oracle" | "noisy:<sigma>" |
+    # "histogram[:<alpha>]" — or None for the paper's prefill-keyed Alg. 2.
+    # With a predictor set, SJF ranks by predicted REMAINING tokens,
+    # victim_policy="largest_remaining" becomes available, and estimate_ttft
+    # counts only the backlog ranked ahead of the candidate (so shed_slack
+    # can sit at 1.0 instead of compensating for over-conservatism).
+    predictor: Optional[str] = None
+    predictor_seed: int = 0          # noisy-oracle draw seed (shared by planes)

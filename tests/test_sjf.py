@@ -1,7 +1,11 @@
-"""Request-level scheduling (paper Algorithm 2) unit + property tests."""
+"""Request-level scheduling (paper Algorithm 2 + SRPT) unit + property tests."""
+import random
+
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.sjf import SJFQueue, fcfs_order, sjf_order
+from repro.core.predictor import OraclePredictor
+from repro.core.sjf import SJFQueue, fcfs_order, order_key, sjf_order
 from repro.core.types import GimbalConfig, Request
 
 
@@ -86,3 +90,122 @@ def test_waiting_tokens():
     assert q.waiting_tokens == 350
     q.drain()
     assert q.waiting_tokens == 0
+
+
+# ------------------------------------------------------- property: invariants
+@given(st.lists(st.tuples(st.integers(1, 10_000), st.floats(0, 20)),
+                min_size=1, max_size=50),
+       st.floats(0, 10))
+@settings(max_examples=100, deadline=None)
+def test_property_aging_is_monotone(items, dt):
+    """No starvation past theta_age: once a request ages it STAYS aged at
+    every later time — waiting longer can never demote it back below a
+    smaller competitor."""
+    cfg = GimbalConfig(theta_age=5.0)
+    rs = [req(i, plen, t=20.0 - w) for i, (plen, w) in enumerate(items)]
+    aged_now = {r.req_id for r in rs if order_key(r, 20.0, cfg)[0] == -1}
+    aged_later = {r.req_id for r in rs
+                  if order_key(r, 20.0 + dt, cfg)[0] == -1}
+    assert aged_now <= aged_later
+    out = sjf_order(rs, now=20.0 + dt, cfg=cfg)
+    # every previously-aged request still precedes every non-aged one
+    pos = {r.req_id: i for i, r in enumerate(out)}
+    non_aged = [r.req_id for r in out if not r.aged]
+    assert all(pos[a] < pos[b] for a in aged_now for b in non_aged)
+
+
+@given(st.lists(st.tuples(st.integers(1, 50), st.floats(0, 20)),
+                min_size=1, max_size=50),
+       st.integers(0, 2**31))
+@settings(max_examples=100, deadline=None)
+def test_property_order_is_permutation_invariant(items, shuffle_seed):
+    """Same set in any input order -> the SAME output sequence: the key is a
+    total order (ties break by req_id), so scheduling cannot depend on
+    arrival bookkeeping order.  Small prompt range forces many ties."""
+    rs = [req(i, plen, t=20.0 - w) for i, (plen, w) in enumerate(items)]
+    baseline = [r.req_id for r in sjf_order(rs, now=20.0)]
+    shuffled = list(rs)
+    random.Random(shuffle_seed).shuffle(shuffled)
+    assert [r.req_id for r in sjf_order(shuffled, now=20.0)] == baseline
+
+
+@given(st.lists(st.integers(1, 600), min_size=1, max_size=30),
+       st.integers(1, 1000))
+@settings(max_examples=100, deadline=None)
+def test_property_pop_next_never_exceeds_budget(plens, budget):
+    """pop_next admits within the prefill budget — the only overrun ever
+    allowed is a single oversized head admitted alone."""
+    q = SJFQueue()
+    q.extend([req(i, p) for i, p in enumerate(plens)])
+    popped = q.pop_next(now=0.0, budget_tokens=budget)
+    total = sum(r.prompt_len for r in popped)
+    assert total <= budget or (len(popped) == 1
+                               and popped[0].prompt_len > budget)
+    assert q.waiting_tokens == sum(p for p in plens) - total
+
+
+@given(st.lists(st.tuples(st.integers(1, 500), st.integers(1, 200),
+                          st.integers(0, 150)),
+                min_size=1, max_size=40))
+@settings(max_examples=100, deadline=None)
+def test_property_srpt_rerank_matches_remaining(items):
+    """SRPT mode: with a predictor attached and no aging, the queue order is
+    exactly ascending predicted-remaining work — and as decode progresses
+    (generated grows), re-ranking stays consistent with the new remaining."""
+    pred = OraclePredictor()
+    rs = []
+    for i, (plen, max_new, gen) in enumerate(items):
+        r = req(i, plen)
+        r.max_new_tokens = max_new
+        r.generated = gen           # mid-decode state (e.g. re-queued victim)
+        rs.append(r)
+    out = sjf_order(rs, now=0.0, predictor=pred)
+    rem = [pred.remaining(r) for r in out]
+    assert rem == sorted(rem)
+    # the assigned priority IS the remaining-work key for non-aged requests
+    assert all(r.priority == pred.remaining(r) for r in out)
+
+
+# ------------------------------------------------------- remove / index map
+def test_remove_is_exact_and_rejects_strangers():
+    q = SJFQueue()
+    rs = [req(i, 10 * (i + 1)) for i in range(5)]
+    q.extend(rs)
+    q.remove(rs[2])                     # middle: swap-delete path
+    q.remove(rs[4])                     # (former) tail
+    assert sorted(r.req_id for r in q) == [0, 1, 3]
+    assert q.waiting_tokens == 10 + 20 + 40
+    with pytest.raises(ValueError):
+        q.remove(rs[2])                 # already gone
+    with pytest.raises(ValueError):
+        q.push(rs[0])                   # duplicate push
+    # the queue still orders correctly after swap-deletes
+    assert [r.req_id for r in q.pop_next(0.0, budget_tokens=10_000)] == [0, 1, 3]
+    assert q.waiting_tokens == 0
+
+
+@given(st.lists(st.tuples(st.integers(1, 500), st.booleans()), min_size=1,
+                max_size=40),
+       st.integers(0, 2**31))
+@settings(max_examples=100, deadline=None)
+def test_property_waiting_tokens_exact_under_churn(items, shuffle_seed):
+    """push/remove/extend keep waiting_tokens EXACTLY sum(prompt_len): the
+    incremental counter never drifts from the ground truth, whatever the
+    interleaving (the S4 index-map regression)."""
+    q = SJFQueue()
+    alive = {}
+    rng = random.Random(shuffle_seed)
+    for i, (plen, do_remove) in enumerate(items):
+        r = req(i, plen)
+        q.push(r)
+        alive[i] = r
+        if do_remove and alive:
+            victim = alive.pop(rng.choice(sorted(alive)))
+            q.remove(victim)
+        if i % 7 == 3:
+            q.reorder(now=float(i))     # reindex mid-churn
+        assert q.waiting_tokens == sum(x.prompt_len for x in alive.values())
+        assert len(q) == len(alive)
+    q.extend([req(1000 + j, 5) for j in range(3)])
+    assert q.waiting_tokens == \
+        sum(x.prompt_len for x in alive.values()) + 15
