@@ -38,6 +38,13 @@ Fault axis: ``fault:<drill>`` runs the cell under a timed fault drill
 (distributed/drill.py DRILLS — silent crash with HealthMonitor
 auto-detection, orchestrated KV-migrated failover, elastic resize) and adds
 goodput-retention / detection / recovery columns against the no-fault twin.
+Prefill axis: ``prefill:<mode>[@<budget>][/<topo>]`` sweeps the prefill
+admission path on the "combined" dispatch base — ``prefill:chunked@512``
+varies the chunk budget, ``prefill:layered`` pipelines admission over the
+model layers, and a ``/2p6d`` topology suffix disaggregates the cluster
+into 2 prefill- + 6 decode-role engines with KV hand-off on the wire
+(``prefill:chunked`` alone IS the combined baseline at the default budget,
+keyed separately so the ablation reads off one table).
 """
 from __future__ import annotations
 
@@ -46,6 +53,7 @@ import dataclasses
 import itertools
 import json
 import os
+import re
 import sys
 import time
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
@@ -64,8 +72,18 @@ DOCS = Path(__file__).resolve().parent.parent / "docs"
 # assignment path, rr/prefix/kv/sticky/combined variants, sess: session
 # workloads, prefix-hit columns); 5 = fault axis (distributed/drill.py
 # drills + HealthMonitor auto-failover + "shed" SLO-aware admission control,
-# goodput-retention/recovery columns) and shed-aware attainment accounting.
-CAMPAIGN_SCHEMA = 5
+# goodput-retention/recovery columns) and shed-aware attainment accounting;
+# 6 = prefill axis (prefill:<mode>[@<budget>][/<topo>] variants, layered
+# admission + disaggregated prefill/decode roles with KV hand-off,
+# kv_transfer columns) and the estimate_ttft partial-final-chunk fix —
+# which only moves "shed" cells (the sole estimate_ttft consumer), so
+# schema-5 rows are adopted wholesale except the shed| keys.
+CAMPAIGN_SCHEMA = 6
+# schema whose rows stay valid under the current one, minus the keys matched
+# by _COMPAT_STALE (see CampaignCache): resuming a long campaign must not
+# throw away hundreds of unaffected cells over a one-variant fix
+_COMPAT_SCHEMA = 5
+_COMPAT_STALE = ("shed|",)
 
 MODEL = "qwen3-30b-a3b"
 N_ENGINES = 2
@@ -73,7 +91,16 @@ KV_POOL = 60_000
 MMPP_BURSTINESS = 4.0           # benchmarks/common.py calibration
 CAMPAIGN_VARIANTS = ("vllm", "dplb", "sjfs", "edr", "eplb", "gimbal",
                      "gimbal+rep", "gimbal_p", "shed", "srpt",
-                     "rr", "prefix", "kv", "sticky", "combined")
+                     "rr", "prefix", "kv", "sticky", "combined",
+                     "prefill:chunked", "prefill:layered",
+                     "prefill:chunked/1p1d", "prefill:layered/1p1d")
+# prefill axis grammar: mode is the SchedulerCore admission state machine,
+# @<budget> overrides the chunked prefill token budget, /<P>p<D>d replaces
+# the unified fleet with P prefill-role + D decode-role engines (KV hand-off
+# between them billed at the cost model's migration bandwidth)
+PREFILL_VARIANT_RE = re.compile(
+    r"^prefill:(chunked|layered)(?:@(\d+))?(?:/(\d+)p(\d+)d)?$")
+PREFILL_BUDGET = 2048               # simulate()'s default chunk budget
 # vocabulary for sess:<suite> session-transcript token draws (the value only
 # shapes block-hash identity, not cost-model time) and the transcript cap:
 # 4k contexts keep session prompts in the same length regime as the Fig. 5
@@ -171,7 +198,8 @@ MATRICES: Dict[str, Matrix] = {
     "quick": Matrix(
         name="quick",
         variants=("vllm", "sjfs", "eplb", "gimbal", "gimbal+rep", "gimbal_p",
-                  "shed", "rr", "combined"),
+                  "shed", "rr", "combined",
+                  "prefill:layered", "prefill:layered/1p1d"),
         workloads=("mix:chat_vs_batch", "mix:three_tier", "bgpt:random",
                    "sess:chat_vs_batch"),
         arrivals=("poisson", "mmpp", "flash"),
@@ -180,13 +208,27 @@ MATRICES: Dict[str, Matrix] = {
         n_requests=200,
         expert_skew=("base", "hot"),
         fault=("none", "kill_restore")),
+    # the prefill-admission / disaggregation ablation: chunked vs layered vs
+    # halved chunk budget vs 1P+1D role-split topologies, on the sticky
+    # session workload (real shared prefixes) under bursty arrivals near
+    # saturation — the regime where a prefill burst actually stalls decode
+    "prefill": Matrix(
+        name="prefill",
+        variants=("prefill:chunked", "prefill:chunked@512",
+                  "prefill:layered", "prefill:chunked/1p1d",
+                  "prefill:layered/1p1d"),
+        workloads=("sess:chat_vs_batch",),
+        arrivals=("mmpp",),
+        rps=(8.57, 10.0),
+        seeds=(0, 1),
+        n_requests=200),
     # CI-sized: exercises every moving part (mix + bgpt + session workloads,
     # two arrival processes, preemptive + scored-dispatch + shedding
     # variants, the kill_restore drill, resume path) in seconds
     "smoke": Matrix(
         name="smoke",
         variants=("vllm", "gimbal_p", "gimbal+rep", "shed", "srpt",
-                  "combined"),
+                  "combined", "prefill:layered/1p1d"),
         workloads=("mix:chat_vs_batch", "bgpt:random", "sess:chat_vs_batch"),
         arrivals=("mmpp", "flash"),
         rps=(10.0,),
@@ -259,7 +301,21 @@ def run_cell(cell: Dict) -> Dict:
 
     variant = cell["variant"]
     gcfg = GimbalConfig(tau=TAU)
-    if variant == "gimbal_p":
+    n_engines, roles = N_ENGINES, None
+    prefill_mode, prefill_budget = "chunked", PREFILL_BUDGET
+    pf = PREFILL_VARIANT_RE.match(variant)
+    if pf:
+        # prefill:<mode>[@<budget>][/<P>p<D>d] rides the "combined" dispatch
+        # base, so only the prefill admission path / topology varies
+        prefill_mode = pf.group(1)
+        if pf.group(2):
+            prefill_budget = int(pf.group(2))
+        if pf.group(3):
+            n_p, n_d = int(pf.group(3)), int(pf.group(4))
+            n_engines = n_p + n_d
+            roles = ("prefill",) * n_p + ("decode",) * n_d
+        variant = "combined"
+    elif variant == "gimbal_p":
         variant, gcfg = "gimbal", GimbalConfig(tau=TAU, enable_preemption=True)
     elif variant == "gimbal+rep":
         gcfg = GimbalConfig(tau=TAU, redundancy=REP_REDUNDANCY)
@@ -281,11 +337,13 @@ def run_cell(cell: Dict) -> Dict:
     trace = build_trace(cell["workload"], cell["arrival"], cell["rps"],
                         cell["seed"], cell["n"])
     t0 = time.time()
-    res = simulate(trace, variant, get_config(MODEL), n_engines=N_ENGINES,
+    res = simulate(trace, variant, get_config(MODEL), n_engines=n_engines,
                    hw="a100", gcfg=gcfg, kv_pool_tokens=KV_POOL,
                    seed=cell["seed"],
                    hot_boost=EXPERT_SKEW[cell.get("expert_skew", "base")],
-                   drill=drill, health=health)
+                   drill=drill, health=health,
+                   prefill_budget=prefill_budget, prefill_mode=prefill_mode,
+                   roles=roles)
     row = dict(cell)
     row.update(_report_cols(res.report))
     row["preemptions"] = res.preemptions
@@ -298,6 +356,8 @@ def run_cell(cell: Dict) -> Dict:
     row["prefix_probed"] = res.prefix_probed
     row["prefix_hit_rate"] = res.prefix_hit_rate
     row["migrations"] = res.migrations
+    row["kv_transfers"] = len(res.kv_transfers)
+    row["kv_transfer_s"] = res.kv_transfer_s
     row["moe_mult"] = res.moe_mult_final
     row["cross_frac"] = res.cross_frac_final
     row["moe_mult_trajectory"] = [[s, m] for s, m in res.moe_mult_trajectory]
@@ -328,6 +388,14 @@ class CampaignCache:
                 disk = {}       # truncated by a mid-write kill: start fresh
             if disk.get("_schema") == CAMPAIGN_SCHEMA:
                 self.rows = {k: v for k, v in disk.items() if k != "_schema"}
+            elif disk.get("_schema") == _COMPAT_SCHEMA:
+                # the schema bump only invalidated the _COMPAT_STALE cells
+                # (see the CAMPAIGN_SCHEMA history); adopt everything else so
+                # a resumed campaign re-simulates only what actually changed
+                self.rows = {
+                    k: v for k, v in disk.items()
+                    if k != "_schema"
+                    and not any(k.startswith(p) for p in _COMPAT_STALE)}
 
     def put(self, key: str, row: Dict) -> None:
         self.rows[key] = row
@@ -436,8 +504,66 @@ def render_report(rows: List[Dict], matrix: Matrix) -> str:
                              _fmt(_mean_over_seeds(sel, "moe_mult"))]
                             + per_class) + " |")
             lines.append("")
+    lines.extend(_render_prefill_section(rows, matrix))
     lines.extend(_render_fault_section(rows, matrix))
     return "\n".join(lines) + "\n"
+
+
+def _render_prefill_section(rows: List[Dict], matrix: Matrix) -> List[str]:
+    """The prefill-admission / disaggregation table: one row per
+    (prefill:* variant, workload, arrival, rps) averaged over seeds, with
+    the decode TPOT-stall ratio and the KV-transfer columns.  Empty when
+    the matrix carries no prefill:* variants."""
+    variants = [v for v in matrix.variants if v.startswith("prefill:")]
+    sel_all = [r for r in rows
+               if r["variant"].startswith("prefill:")
+               and r.get("fault", "none") == "none"]
+    if not variants or not sel_all:
+        return []
+    lines = [
+        "## Prefill modes and disaggregation",
+        "",
+        "`prefill:<mode>[@<budget>][/<topo>]` cells on the `combined`"
+        " dispatch base.  Layered admission interleaves decode at layer"
+        " boundaries, so the decode **TPOT stall** (p99 ÷ mean TPOT — how"
+        " far a prefill burst stretches the worst decode steps above the"
+        " typical one) should drop vs chunked at matched goodput; a"
+        " `/<P>p<D>d` topology splits the fleet into prefill-/decode-role"
+        " engines and the **KV transfer** columns count the hand-offs and"
+        " the wire seconds billed for them (unified topologies transfer"
+        " nothing).",
+        "",
+    ]
+    hdr = ["variant", "workload", "arrival", "rps", "mean TTFT",
+           "mean TPOT", "p99 TPOT", "TPOT stall", "goodput tok/s",
+           "SLO attain", "KV transfers", "transfer s"]
+    lines.append("| " + " | ".join(hdr) + " |")
+    lines.append("|" + "---|" * len(hdr))
+    for v in variants:
+        for w in matrix.workloads:
+            for a in matrix.arrivals:
+                for rps in matrix.rps:
+                    sel = [r for r in sel_all
+                           if r["variant"] == v and r["workload"] == w
+                           and r["arrival"] == a and r["rps"] == rps]
+                    if not sel:
+                        continue
+                    mean_tpot = _mean_over_seeds(sel, "mean_tpot")
+                    p99_tpot = _mean_over_seeds(sel, "p99_tpot")
+                    stall = (p99_tpot / mean_tpot
+                             if mean_tpot and mean_tpot == mean_tpot
+                             else float("nan"))
+                    lines.append("| " + " | ".join(
+                        [f"`{v}`", f"`{w}`", a, _fmt(rps),
+                         _fmt(_mean_over_seeds(sel, "mean_ttft")),
+                         _fmt(mean_tpot), _fmt(p99_tpot), _fmt(stall),
+                         _fmt(_mean_over_seeds(sel, "goodput_tok_s")),
+                         _fmt(_mean_over_seeds(sel, "slo_attainment")),
+                         _fmt(_mean_over_seeds(sel, "kv_transfers")),
+                         _fmt(_mean_over_seeds(sel, "kv_transfer_s"))])
+                        + " |")
+    lines.append("")
+    return lines
 
 
 def _render_fault_section(rows: List[Dict], matrix: Matrix) -> List[str]:

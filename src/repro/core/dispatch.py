@@ -94,8 +94,9 @@ class ScoredRouter(GimbalRouter):
     def select(self, request: Request, metrics: Dict[int, EngineMetrics],
                now: Optional[float] = None) -> int:
         now = time.monotonic() if now is None else now
-        healthy = [e for e in self.engine_ids
-                   if metrics.get(e, EngineMetrics(e)).healthy] or self.engine_ids
+        pool = self._role_pool(request)
+        healthy = [e for e in pool
+                   if metrics.get(e, EngineMetrics(e)).healthy] or pool
 
         fresh = {m.engine_id: m for m in self._fresh_metrics(metrics, now)}
         held: Dict[int, int] = {}
@@ -141,6 +142,11 @@ class DispatchCore:
         self.directory = PrefixDirectory(block_size=block_size)
         self.router = make_router(variant, engine_ids, self.cfg,
                                   directory=self.directory)
+        # disaggregated prefill/decode roles, shared INTO the router's role
+        # map: fresh requests dispatch to prefill/unified engines, KV-
+        # migrated hand-offs to decode/unified ones (core/router.py
+        # _role_pool).  Empty / all-"unified" = historical behavior.
+        self.roles: Dict[int, str] = self.router.roles
         self.assignments: List[Tuple[int, int]] = []
         # (kind, engine_id) membership-change stream in decision order — the
         # lifecycle parity oracle: a fault drill driven through the serving
@@ -156,10 +162,15 @@ class DispatchCore:
         HealthMonitor's decisions, not just their consequences)."""
         self.lifecycle.append((kind, engine_id))
 
-    def attach_engine(self, engine_id: int, prefix_cache=None) -> None:
+    def attach_engine(self, engine_id: int, prefix_cache=None,
+                      role: Optional[str] = None) -> None:
         if engine_id not in self.router.engine_ids:
             self.router.add_engine(engine_id)
             self.note_lifecycle("attach", engine_id)
+        if role is not None:
+            if role not in ("prefill", "decode", "unified"):
+                raise ValueError(f"unknown engine role {role!r}")
+            self.roles[engine_id] = role
         if prefix_cache is not None:
             self.directory.attach(engine_id, prefix_cache)
 

@@ -20,6 +20,12 @@ by subscription, not by polling:
 Block identity is the chained hash of ``core/prefix_cache.py`` — equal hash
 implies equal whole prefix — so ``longest_prefix`` can count the leading
 matched run per engine exactly like a local cache probe would.
+
+Lookups use an inverted index (block hash -> holder engine set) alongside the
+per-engine sets: ``longest_prefix`` walks the prompt's blocks once and
+intersects holder sets, so its cost scales with the number of engines still
+matching — not with fleet size.  At 1000 engines a dispatch probe touches a
+handful of sets instead of scanning every engine's whole holding.
 """
 from __future__ import annotations
 
@@ -32,6 +38,23 @@ class PrefixDirectory:
     def __init__(self, block_size: int = 16):
         self.block_size = block_size
         self._held: Dict[int, Set[int]] = {}
+        # inverted index: block hash -> engines advertising it.  Kept exactly
+        # in lockstep with _held by _add/_discard (the ONLY mutation paths).
+        self._index: Dict[int, Set[int]] = {}
+
+    # --- the two mutation paths (keep _held and _index consistent) ----------
+
+    def _add(self, engine_id: int, h: int) -> None:
+        self._held.setdefault(engine_id, set()).add(h)
+        self._index.setdefault(h, set()).add(engine_id)
+
+    def _discard(self, engine_id: int, h: int) -> None:
+        self._held.get(engine_id, set()).discard(h)
+        holders = self._index.get(h)
+        if holders is not None:
+            holders.discard(engine_id)
+            if not holders:
+                del self._index[h]
 
     # --- feeding the directory ---------------------------------------------
 
@@ -45,16 +68,14 @@ class PrefixDirectory:
                 f"engine {engine_id} cache block_size {cache.block_size} != "
                 f"directory block_size {self.block_size}")
         self._held.setdefault(engine_id, set())
-        cache.on_insert = lambda h, e=engine_id: \
-            self._held.setdefault(e, set()).add(h)
-        cache.on_evict = lambda h, e=engine_id: \
-            self._held.get(e, set()).discard(h)
+        cache.on_insert = lambda h, e=engine_id: self._add(e, h)
+        cache.on_evict = lambda h, e=engine_id: self._discard(e, h)
 
     def record(self, engine_id: int, tokens: Sequence[int]) -> None:
         """Directly advertise a prompt's blocks for an engine (tests and
         cache-less planes; attached engines feed automatically)."""
-        self._held.setdefault(engine_id, set()).update(
-            block_hashes(tokens, self.block_size))
+        for h in block_hashes(tokens, self.block_size):
+            self._add(engine_id, h)
 
     # --- invalidation -------------------------------------------------------
 
@@ -62,7 +83,8 @@ class PrefixDirectory:
         """Engine failure: all its advertised prefixes are gone."""
         held = self._held.get(engine_id)
         if held is not None:
-            held.clear()
+            for h in list(held):
+                self._discard(engine_id, h)
 
     # --- queries ------------------------------------------------------------
 
@@ -72,18 +94,22 @@ class PrefixDirectory:
     def longest_prefix(self, tokens: Sequence[int]) -> Dict[int, int]:
         """Tokens of ``tokens``'s leading run each engine holds (prefix
         property: the count stops at an engine's first missing block).
-        Engines holding nothing are omitted."""
-        hashes = block_hashes(tokens, self.block_size)
+        Engines holding nothing are omitted.
+
+        One pass over the prompt's blocks against the inverted index: the
+        surviving-intersection set is exactly the engines whose match run
+        reaches the current block, so an engine's count freezes the moment it
+        drops out — identical to probing every engine's cache directly."""
         out: Dict[int, int] = {}
-        for eid, held in self._held.items():
-            matched = 0
-            for h in hashes:
-                if h in held:
-                    matched += 1
-                else:
-                    break
-            if matched:
-                out[eid] = matched * self.block_size
+        alive: Optional[Set[int]] = None
+        for h in block_hashes(tokens, self.block_size):
+            holders = self._index.get(h, ())
+            alive = (set(holders) if alive is None
+                     else {e for e in alive if e in holders})
+            if not alive:
+                break
+            for e in alive:
+                out[e] = out.get(e, 0) + self.block_size
         return out
 
     def best_engine(self, tokens: Sequence[int]) -> Optional[Tuple[int, int]]:

@@ -18,11 +18,30 @@ class RoundRobinRouter:
     def __init__(self, engine_ids: Sequence[int], cfg: Optional[GimbalConfig] = None):
         self.engine_ids = list(engine_ids)
         self._next = 0
+        # engine roles for disaggregated prefill/decode dispatch
+        # (DispatchCore shares its role map into this dict).  Empty or
+        # all-"unified": every select behaves exactly as before.
+        self.roles: Dict[int, str] = {}
+
+    def _role_pool(self, request: Request) -> List[int]:
+        """Candidate engines honoring disaggregated roles: fresh requests
+        (prefill ahead of them) go to prefill/unified engines; KV-migrated
+        requests (prefill done, pages travelling) go to decode/unified
+        engines.  Falls back to every engine when the wanted pool is empty
+        (e.g. all decode engines failed) — degraded beats stranded."""
+        if not self.roles or all(v == "unified" for v in self.roles.values()):
+            return self.engine_ids
+        want = (("decode", "unified") if request.kv_migrated
+                else ("prefill", "unified"))
+        pool = [e for e in self.engine_ids
+                if self.roles.get(e, "unified") in want]
+        return pool or self.engine_ids
 
     def select(self, request: Request, metrics: Dict[int, EngineMetrics],
                now: Optional[float] = None) -> int:
-        healthy = [e for e in self.engine_ids if metrics.get(e, EngineMetrics(e)).healthy]
-        ids = healthy or self.engine_ids
+        ids = self._role_pool(request)
+        healthy = [e for e in ids if metrics.get(e, EngineMetrics(e)).healthy]
+        ids = healthy or ids
         e = ids[self._next % len(ids)]
         self._next += 1
         return e
@@ -90,14 +109,16 @@ class GimbalRouter(RoundRobinRouter):
     def select(self, request: Request, metrics: Dict[int, EngineMetrics],
                now: Optional[float] = None) -> int:
         now = time.monotonic() if now is None else now
-        healthy = [e for e in self.engine_ids
-                   if metrics.get(e, EngineMetrics(e)).healthy] or self.engine_ids
+        pool = self._role_pool(request)
+        healthy = [e for e in pool
+                   if metrics.get(e, EngineMetrics(e)).healthy] or pool
 
         # line 1: default round-robin candidate
         e_star = healthy[self._next % len(healthy)]
         self._next += 1
 
-        ms = self._fresh_metrics(metrics, now)
+        ms = [m for m in self._fresh_metrics(metrics, now)
+              if m.engine_id in healthy]
         rebalanced = False
         if ms:                                                    # line 2
             kv = {m.engine_id: m.kv_usage for m in ms}
@@ -137,8 +158,9 @@ class GimbalRouter(RoundRobinRouter):
         waited = now - request.arrival_time
         if waited < self.cfg.hedge_threshold:
             return None
+        pool = self._role_pool(request)
         ms = [m for m in self._fresh_metrics(metrics, now)
-              if m.engine_id != request.engine_id]
+              if m.engine_id != request.engine_id and m.engine_id in pool]
         if not ms:
             return None
         return min(ms, key=lambda m: m.running_load).engine_id

@@ -79,6 +79,18 @@ class RunningSeq:
     admit_time: float
 
 
+@dataclasses.dataclass
+class LayeredPrefill:
+    """A request mid-prefill under ``prefill_mode="layered"``: its prefill is
+    ``n_layers`` micro-steps that interleave with decode at layer boundaries
+    (instead of token-chunk boundaries).  ``tokens`` is the budget charge
+    captured at admission — the token count each micro-step re-touches."""
+    r: Request
+    tokens: int
+    layers_done: int
+    admit_time: float
+
+
 class Backend(Protocol):
     """What SchedulerCore needs from an execution substrate."""
 
@@ -106,8 +118,13 @@ class Backend(Protocol):
         ...
 
     def step_time(self, now: float, prefill_tokens: int, decode_batch: int,
-                  avg_ctx: float, queue_len: int) -> float:
-        """Timestamp at which this iteration's tokens materialize."""
+                  avg_ctx: float, queue_len: int,
+                  layer_jobs: Optional[Sequence[int]] = None) -> float:
+        """Timestamp at which this iteration's tokens materialize.
+        ``layer_jobs`` (layered prefill mode only): token counts of the
+        in-flight prefills each advancing ONE model layer this iteration —
+        charged per CostModel.prefill_layer_time instead of the fused
+        ``prefill_tokens`` path.  Chunked-mode callers never pass it."""
         ...
 
     def kv_usage(self, kv_tokens: int) -> float:
@@ -131,11 +148,27 @@ class SchedulerCore:
     def __init__(self, backend: Backend, queue: SJFQueue,
                  gcfg: Optional[GimbalConfig] = None, *,
                  prefill_budget: int = 512, engine_id: int = 0,
-                 expert_level=None, prefix_cache: Optional[PrefixCache] = None):
+                 expert_level=None, prefix_cache: Optional[PrefixCache] = None,
+                 prefill_mode: str = "chunked"):
+        if prefill_mode not in ("chunked", "layered"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.backend = backend
         self.queue = queue
         self.gcfg = gcfg or GimbalConfig()
         self.prefill_budget = prefill_budget
+        # --- prefill admission state machine ---------------------------------
+        # "chunked" (historical): an admitted request prefills whole in its
+        # admission step, fused with that step's decode batch.  "layered": an
+        # admitted request's prefill becomes n_layers micro-steps — one model
+        # layer per engine iteration — so decode interleaves at every layer
+        # boundary and only ever stalls for ONE layer of prefill (the paper
+        # family's layered-prefill admission; backends charge micro-steps via
+        # ``step_time(..., layer_jobs=...)`` / CostModel.prefill_layer_time).
+        # Requests with nothing to prefill (fully prefix-cached, KV-migrated
+        # hand-offs) skip the pipeline and start in their admission step.
+        self.prefill_mode = prefill_mode
+        self.n_layers = max(int(getattr(backend, "n_layers", 1)), 1)
+        self._prefilling: List[LayeredPrefill] = []
         self.engine_id = engine_id
         self.expert = expert_level
         self.prefix = prefix_cache if prefix_cache is not None else PrefixCache()
@@ -201,14 +234,25 @@ class SchedulerCore:
                 if order_key(w, now, self.gcfg, self.predictor) < k)
         else:
             tokens_ahead = self.queue.waiting_tokens + r.prompt_len
+        if tokens_ahead <= 0:
+            return 0.0
         chunk = max(self.prefill_budget, 1)
         iters = -(-tokens_ahead // chunk)       # ceil
         avg_ctx = (float(np.mean(list(self.ctx_tokens.values())))
                    if self.ctx_tokens else 0.0)
-        per = self.backend.est_iter_time(min(tokens_ahead, chunk),
-                                         len(self.running), avg_ctx,
-                                         queue_len=len(self.queue))
-        return iters * per
+        # the final chunk is usually PARTIAL: price it at its actual size
+        # instead of a full chunk (pricing every iteration at full-chunk
+        # est_iter_time over-charged remainders by up to one chunk's worth
+        # of prefill, inflating shed decisions near the deadline)
+        rem = tokens_ahead - (iters - 1) * chunk
+        per_rem = self.backend.est_iter_time(rem, len(self.running), avg_ctx,
+                                             queue_len=len(self.queue))
+        if iters == 1:
+            return per_rem
+        per_full = self.backend.est_iter_time(chunk, len(self.running),
+                                              avg_ctx,
+                                              queue_len=len(self.queue))
+        return (iters - 1) * per_full + per_rem
 
     def _maybe_shed(self, r: Request, now: float) -> bool:
         """SLO-aware admission control: True = rejected (do not enqueue).
@@ -262,7 +306,7 @@ class SchedulerCore:
             engine_id=self.engine_id,
             kv_usage=self.backend.kv_usage(kv_held),
             running_load=self.kv_tokens + self.queue.waiting_tokens,
-            num_running=len(self.running),
+            num_running=len(self.running) + len(self._prefilling),
             num_waiting=len(self.queue),
             timestamp=now,
             healthy=self.healthy,
@@ -271,10 +315,11 @@ class SchedulerCore:
 
     @property
     def idle(self) -> bool:
-        return not self.running and len(self.queue) == 0
+        return (not self.running and not self._prefilling
+                and len(self.queue) == 0)
 
     def num_running(self) -> int:
-        return len(self.running)
+        return len(self.running) + len(self._prefilling)
 
     def running_requests(self) -> List[Request]:
         return [seq.r for seq in self.running]
@@ -384,7 +429,8 @@ class SchedulerCore:
         Block mode gates on distinct blocks — rounding every charge up while
         not double-counting shared prefix blocks — because that, not the
         token sum, is what exhausts a paged device pool."""
-        if len(self.running) + n_admitted >= self.backend.max_concurrency:
+        if (len(self.running) + len(self._prefilling) + n_admitted
+                >= self.backend.max_concurrency):
             return True
         bs = self.kv_block_size
         if bs > 1:
@@ -400,7 +446,8 @@ class SchedulerCore:
         is re-derived against the post-eviction resident set."""
         evictable = [v for _, v in eligible_victims(
             [(seq.handle, seq.r) for seq in self.running], r.rank, self.gcfg)]
-        run_after = len(self.running) - len(evictable) + n_admitted
+        run_after = (len(self.running) + len(self._prefilling)
+                     - len(evictable) + n_admitted)
         if run_after >= self.backend.max_concurrency:
             return False
         bs = self.kv_block_size
@@ -464,7 +511,11 @@ class SchedulerCore:
         Returns (admitted, victims); victims must be re-queued by the caller
         only after admission completes."""
         order = self.queue.reorder(now)
-        budget = self.prefill_budget
+        # layered mode: requests mid-pipeline re-touch their tokens every
+        # micro-step, so in-flight charges stay against the budget until
+        # their last layer — bounding total concurrent prefill work to one
+        # budget's worth across the pipeline (chunked: always 0)
+        budget = self.prefill_budget - sum(p.tokens for p in self._prefilling)
         admitted: List[Request] = []
         victims: List[Request] = []
         blocked_rank = _UNBLOCKED_RANK      # most-urgent rank blocked so far
@@ -472,7 +523,7 @@ class SchedulerCore:
             if r.rank >= blocked_rank:
                 continue
             need = self._charge(r)
-            if need > budget and admitted:
+            if need > budget and (admitted or self._prefilling):
                 if self.gcfg.enable_preemption:
                     # budget-blocked head: strictly-more-urgent requests
                     # behind it may still be scanned (symmetric with the
@@ -504,6 +555,28 @@ class SchedulerCore:
             self.events.append(SchedEvent("admit", self.steps, r.req_id))
         return admitted, victims
 
+    def _begin(self, r: Request, now: float, end: float,
+               admit_time: Optional[float] = None) -> None:
+        """Start serving ``r``: backend prefill, decode seat, first token at
+        ``end``.  A KV-migrated orphan resumes with its progress: its first
+        token was already delivered elsewhere, so neither TTFT nor the
+        generated count reset (KV-lost orphans re-prefill and re-earn their
+        first token like any fresh admit)."""
+        handle, stats = self.backend.start(r, now)
+        if stats is not None and self.expert is not None:
+            self.expert.observe(stats)
+        self.running.append(RunningSeq(
+            r, handle, admit_time=now if admit_time is None else admit_time))
+        r.engine_id = self.engine_id
+        resumed = r.kv_migrated and r.first_token_time is not None
+        self.ctx_tokens[r.req_id] = self._kv_demand(r)  # incl. migrated gen
+        r.kv_migrated = False
+        if not resumed:
+            r.first_token_time = end
+            r.generated = 1
+            self._grow_ctx(r.req_id)    # + the first generated token;
+            #                             keep kv_tokens == sum(ctx)
+
     # ------------------------------------------------------------------ the loop
     def step(self, now: float) -> Tuple[float, List[Request]]:
         """One continuous-batching iteration starting at ``now``.
@@ -520,30 +593,41 @@ class SchedulerCore:
         # the decode batch: admitted in a PRIOR step and not evicted above
         # (schedule() runs first, so victims never decode after losing KV)
         decoding = list(self.running)
-        prefill_tokens = sum(self._charge(r) for r in admitted)
         avg_ctx = (float(np.mean([self.ctx_tokens[seq.r.req_id]
                                   for seq in decoding])) if decoding else 0.0)
-        end = self.backend.step_time(now, prefill_tokens, len(decoding),
-                                     avg_ctx, queue_len=len(self.queue))
-        # admitted requests prefill; first token materializes at `end`
-        for r in admitted:
-            handle, stats = self.backend.start(r, now)
-            if stats is not None and self.expert is not None:
-                self.expert.observe(stats)
-            self.running.append(RunningSeq(r, handle, admit_time=now))
-            r.engine_id = self.engine_id
-            # a KV-migrated orphan resumes with its progress: its first
-            # token was already delivered elsewhere, so neither TTFT nor
-            # the generated count reset (KV-lost orphans re-prefill and
-            # re-earn their first token like any fresh admit)
-            resumed = r.kv_migrated and r.first_token_time is not None
-            self.ctx_tokens[r.req_id] = self._kv_demand(r)  # incl. migrated gen
-            r.kv_migrated = False
-            if not resumed:
-                r.first_token_time = end
-                r.generated = 1
-                self._grow_ctx(r.req_id)    # + the first generated token;
-                #                             keep kv_tokens == sum(ctx)
+        if self.prefill_mode == "layered":
+            # admitted requests with real prefill work enter the layer
+            # pipeline; the admission step is their first micro-step
+            for r in admitted:
+                if self._charge(r) > 0:
+                    r.engine_id = self.engine_id
+                    self.ctx_tokens[r.req_id] = self._kv_demand(r)
+                    self._prefilling.append(
+                        LayeredPrefill(r, self._charge(r), 0, now))
+            # this iteration = one decode step + ONE layer of prefill per
+            # in-flight request (decode stalls for a layer, not a chunk)
+            end = self.backend.step_time(
+                now, 0, len(decoding), avg_ctx, queue_len=len(self.queue),
+                layer_jobs=[p.tokens for p in self._prefilling])
+            # nothing-to-prefill admits (fully cached / KV-migrated
+            # hand-offs) skip the pipeline and start like a chunked admit
+            for r in admitted:
+                if self._charge(r) == 0:
+                    self._begin(r, now, end)
+            # advance every in-flight prefill one layer; completions emit
+            # their first token at `end` and decode from the next step
+            for p in list(self._prefilling):
+                p.layers_done += 1
+                if p.layers_done >= self.n_layers:
+                    self._prefilling.remove(p)
+                    self._begin(p.r, now, end, admit_time=p.admit_time)
+        else:
+            prefill_tokens = sum(self._charge(r) for r in admitted)
+            end = self.backend.step_time(now, prefill_tokens, len(decoding),
+                                         avg_ctx, queue_len=len(self.queue))
+            # admitted requests prefill; first token materializes at `end`
+            for r in admitted:
+                self._begin(r, now, end)
         # victims re-queue only AFTER admission (see _evict_for)
         self.queue.extend(victims)
         # one decode step over every previously-running request
@@ -602,6 +686,17 @@ class SchedulerCore:
         latency semantics of a KV transfer; the live backend still re-runs
         the prompt prefill physically rather than receiving pages.)"""
         out = self.queue.drain()
+        # mid-pipeline layered prefills: no first token yet, and partial
+        # layer progress is NOT transferable KV — they re-queue elsewhere
+        # as fresh work regardless of ``migrate``
+        for p in list(self._prefilling):
+            r = p.r
+            r.kv_migrated = False
+            r.engine_id = None
+            self.kv_tokens -= self.ctx_tokens.pop(r.req_id, 0)
+            self._release_blocks(r.req_id)
+            out.append(r)
+        self._prefilling.clear()
         for seq in list(self.running):
             r = seq.r
             if migrate:
@@ -617,6 +712,26 @@ class SchedulerCore:
             out.append(r)
         self.running.clear()
         return out
+
+    def pop_handoff(self, req_id: int) -> Optional[Request]:
+        """Disaggregated prefill→decode hand-off: release ONE running request
+        that has finished its prefill (first token emitted) so the cluster
+        can move it to a decode-role engine.  KV semantics are the migrated
+        drain path's — pages travel with the request, progress survives, and
+        the target charges no re-prefill (``submit`` sets ``_cached``).
+        Returns None when ``req_id`` is not running here."""
+        seq = next((s for s in self.running if s.r.req_id == req_id), None)
+        if seq is None:
+            return None
+        r = seq.r
+        self.running.remove(seq)
+        self.kv_tokens -= self.ctx_tokens.pop(req_id, 0)
+        self._release_blocks(req_id)
+        self.backend.release(seq.handle, r)
+        r.kv_migrated = True
+        r.engine_id = None
+        self.events.append(SchedEvent("handoff", self.steps, req_id))
+        return r
 
     def event_log(self) -> List[Tuple[str, int, int]]:
         """The (kind, step, req_id) decision stream — the parity oracle."""

@@ -79,6 +79,9 @@ class JaxBackend:
         # so a request can never hold more than one slot's worth of KV — the
         # core's pool accounting must match or over-long prompts starve
         self.max_ctx_tokens: Optional[int] = max_seq
+        # layered-prefill micro-step count (SchedulerCore reads it; the sim
+        # twin derives the same number from the same ModelConfig)
+        self.n_layers = model_cfg.num_layers
         # optional offline-profiled CostModel powering est_iter_time (the
         # SLO-aware shedding estimate); None = shedding never fires here
         self.cost_hint = None
@@ -219,8 +222,15 @@ class JaxBackend:
         self.kv.free(handle)
 
     def step_time(self, now: float, prefill_tokens: int, decode_batch: int,
-                  avg_ctx: float, queue_len: int) -> float:
+                  avg_ctx: float, queue_len: int,
+                  layer_jobs: Optional[Sequence[int]] = None) -> float:
         return now      # logical clock: the caller owns time
+
+    def transfer_time(self, kv_tokens: int) -> float:
+        """Disaggregated hand-off cost.  The live engine runs on a logical
+        clock (see step_time), so KV transfers are free here; the sim twin
+        prices them through CostModel.migration_time."""
+        return 0.0
 
     def est_iter_time(self, prefill_tokens: int, decode_batch: int,
                       avg_ctx: float, queue_len: int) -> float:

@@ -75,7 +75,8 @@ class Cluster:
         self.dispatch = dispatch_core or DispatchCore(
             variant, list(self.engines), self.gcfg)
         for e in engines:
-            self.dispatch.attach_engine(e.engine_id, getattr(e, "prefix", None))
+            self.dispatch.attach_engine(e.engine_id, getattr(e, "prefix", None),
+                                        role=getattr(e, "role", "unified"))
         self.router = self.dispatch.router
         self.bus = MetricsBus(delay=bus_delay)
         self.finished: List[Request] = []
@@ -91,6 +92,20 @@ class Cluster:
         self.retired: List[Engine] = []     # gracefully removed; accounting kept
         self.rerouted = 0                   # orphan re-dispatches (fail + remove)
         self.fault_log: List[Dict] = []     # timed fail/remove records (telemetry)
+        # --- disaggregated prefill/decode hand-off state ---
+        # requests whose KV pages are on the wire: (ready_time, request,
+        # src engine).  Collected by poll_handoffs off prefill-role engines
+        # the step their prefill finishes; delivered (re-dispatched, which
+        # re-advertises their prefix blocks at the destination) on the first
+        # poll at or after ready_time — always a LATER poll than collection,
+        # so delivery steps are plane-deterministic whenever the transfer
+        # cost is below the driving step width.
+        self._in_transfer: List[tuple] = []
+        # (req_id, src_engine, dst_engine) in delivery order — the KV-
+        # transfer parity oracle (timestamps deliberately excluded); the
+        # transfer COST stays on the clock via ready_time/kv_transfer_s
+        self.kv_transfers: List[tuple] = []
+        self.kv_transfer_s = 0.0            # total seconds of KV on the wire
         self._ready_at: Dict[int, float] = {}
         self._next_engine_id = max(self.engines, default=-1) + 1
 
@@ -115,6 +130,7 @@ class Cluster:
                 continue
             done.extend(e.step(now))
             self.bus.publish(e.metrics(now))
+        self.poll_handoffs(now)
         self._maybe_hedge(now)
         self.health_check(now)
         self.autoscale(now)
@@ -137,10 +153,64 @@ class Cluster:
             if on_step is not None:
                 on_step(self, now)
             now += dt
-            if all(e.num_active() == 0 and len(e.queue) == 0
-                   for e in self.engines.values()):
+            if (not self._in_transfer
+                    and all(e.num_active() == 0 and len(e.queue) == 0
+                            for e in self.engines.values())):
                 break
         return self.finished
+
+    # ---------------------------------------------------- prefill/decode hand-off
+    def poll_handoffs(self, now: float) -> int:
+        """Disaggregated prefill→decode KV hand-off, both directions of the
+        wire.  (1) Deliver every transfer whose ready_time has passed: the
+        request is re-dispatched (role-aware router sends KV-migrated work to
+        decode/unified engines; re-submitting advertises its prefix blocks in
+        the directory at the destination).  (2) Collect finished-prefill
+        requests off prefill-role engines via SchedulerCore.pop_handoff —
+        PR 7's migrated-KV semantics with the transfer cost on the clock
+        (backend.transfer_time over the resident KV tokens).  Returns the
+        number of requests delivered this poll."""
+        delivered = 0
+        for t in [t for t in self._in_transfer if t[0] <= now]:
+            self._in_transfer.remove(t)
+            _, r, src = t
+            r.reroutes += 1
+            dst = self.submit(r, now)
+            self.kv_transfers.append((r.req_id, src, dst))
+            delivered += 1
+        for e in self.engines.values():
+            if getattr(e, "role", "unified") != "prefill" or not e.healthy:
+                continue
+            core = e.core
+            # generated <= 1: exactly the first (prefill-emitted) token —
+            # a request that already decoded here (degraded fallback when no
+            # decode engine was available) is never bounced a second time
+            ready = [seq.r for seq in core.running
+                     if seq.r.first_token_time is not None
+                     and seq.r.generated <= 1]
+            for r in ready:
+                ctx = core.ctx_tokens.get(r.req_id,
+                                          r.prompt_len + r.generated)
+                popped = core.pop_handoff(r.req_id)
+                if popped is None:
+                    continue
+                tt = getattr(getattr(e, "backend", None), "transfer_time",
+                             None)
+                dt_x = tt(ctx) if tt is not None else 0.0
+                self.kv_transfer_s += dt_x
+                self._in_transfer.append((now + dt_x, popped, e.engine_id))
+        return delivered
+
+    def next_transfer_time(self) -> Optional[float]:
+        """Earliest in-flight KV transfer ready_time (None = wire empty) —
+        the simulator races this against arrivals/engine iterations so a
+        transfer completing on an otherwise-idle cluster still delivers."""
+        return min((t[0] for t in self._in_transfer), default=None)
+
+    def kv_transfer_log(self) -> List[tuple]:
+        """(req_id, src_engine, dst_engine) delivery stream — the
+        disaggregation parity oracle (tests/test_scheduler_parity.py)."""
+        return list(self.kv_transfers)
 
     def _maybe_hedge(self, now: float) -> None:
         if self.gcfg.hedge_threshold <= 0 or not hasattr(self.router, "hedge_target"):
@@ -268,7 +338,8 @@ class Cluster:
         self._next_engine_id = max(self._next_engine_id, eid + 1)
         if warmup_s > 0:
             self._ready_at[eid] = now + warmup_s
-        self.dispatch.attach_engine(eid, getattr(engine, "prefix", None))
+        self.dispatch.attach_engine(eid, getattr(engine, "prefix", None),
+                                    role=getattr(engine, "role", "unified"))
         self.bus.publish(engine.metrics(now))
         if self.monitor is not None:
             self.monitor.add_engine(eid, now)
@@ -366,6 +437,13 @@ class Cluster:
         return {"assignments": len(d.assignments),
                 "directory_blocks": {eid: d.directory.blocks_held(eid)
                                      for eid in self.engines}}
+
+    def kv_transfer_stats(self) -> Dict[str, float]:
+        """Disaggregated hand-off telemetry: delivered transfer count, KV
+        seconds on the wire, and how many are still in flight."""
+        return {"kv_transfers": len(self.kv_transfers),
+                "kv_transfer_s": self.kv_transfer_s,
+                "in_flight": len(self._in_transfer)}
 
     def prefix_stats(self) -> Dict[str, float]:
         hits = sum(e.prefix.hit_blocks for e in self._all_engines())

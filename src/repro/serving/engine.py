@@ -42,7 +42,8 @@ class Engine:
                  num_expert_devices: int = 4, eos_id: Optional[int] = None,
                  dispatch_mode: str = "dense", expert_level: Any = _PRIVATE,
                  kv_layout: str = "slot", kv_block_size: int = 16,
-                 kv_quant: Optional[str] = None, use_kernels: bool = False):
+                 kv_quant: Optional[str] = None, use_kernels: bool = False,
+                 role: str = "unified", prefill_mode: str = "chunked"):
         """``expert_level`` should be the ONE ClusterExpertLevel shared by
         every engine of a cluster (core/gimbal.make_cluster_expert_level):
         experts are EP-sharded across all engines' devices (§V-A.1), so
@@ -53,6 +54,9 @@ class Engine:
         self.engine_id = engine_id
         self.cfg = model_cfg
         self.gcfg = gimbal_cfg or GimbalConfig()
+        # disaggregated serving role: Cluster.poll_handoffs collects finished
+        # prefills off "prefill" engines; DispatchCore routes by role
+        self.role = role
         if expert_level is _PRIVATE:
             rebalancer = make_rebalancer(variant, model_cfg,
                                          num_expert_devices, self.gcfg)
@@ -68,7 +72,8 @@ class Engine:
                                   kv_quant=kv_quant, use_kernels=use_kernels)
         self.core = SchedulerCore(self.backend, make_queue(variant, self.gcfg),
                                   self.gcfg, prefill_budget=prefill_budget,
-                                  engine_id=engine_id, expert_level=rebalancer)
+                                  engine_id=engine_id, expert_level=rebalancer,
+                                  prefill_mode=prefill_mode)
 
     # ------------------------------------------------------------------ public API
     def submit(self, r: Request, now: float = 0.0) -> bool:

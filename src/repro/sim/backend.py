@@ -13,7 +13,7 @@ engine recomputes full prefills and charges full length — the one deliberate
 backend asymmetry)."""
 from __future__ import annotations
 
-from typing import Optional, Sequence, Set, Tuple
+from typing import List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -40,6 +40,9 @@ class CostModelBackend:
         # block accounting (set it to the paged JaxBackend's block size when
         # twinning one, so admission/preemption streams stay in parity)
         self.kv_block_size = kv_block_size
+        # layered-prefill micro-step count (SchedulerCore reads it; both
+        # planes derive it from the same ModelConfig, so pipelines agree)
+        self.n_layers = cost.cfg.num_layers
 
     # ------------------------------------------------------------------ Backend protocol
     def start(self, r: Request, now: float
@@ -57,13 +60,27 @@ class CostModelBackend:
         pass    # no weights to move; SyntheticExpertLevel re-derives factors
 
     def step_time(self, now: float, prefill_tokens: int, decode_batch: int,
-                  avg_ctx: float, queue_len: int) -> float:
+                  avg_ctx: float, queue_len: int,
+                  layer_jobs: Optional[List[int]] = None) -> float:
         e = self.cost.cfg.num_experts if self.cost.cfg.is_moe else 1
         rep = getattr(self.expert, "num_slots", e) / max(e, 1)
-        return now + self.cost.iteration_time(
+        t = self.cost.iteration_time(
             prefill_tokens, decode_batch, avg_ctx,
             self.expert.moe_mult, self.expert.cross_frac, queue_len=queue_len,
             rep_factor=rep)
+        if layer_jobs:
+            # layered prefill: each in-flight request advances ONE layer —
+            # the per-layer slice of the fused charge, so n_layers micro-
+            # steps sum to exactly what one chunked iteration charged
+            t += sum(self.cost.prefill_layer_time(
+                n, self.expert.moe_mult, self.expert.cross_frac)
+                for n in layer_jobs)
+        return now + t
+
+    def transfer_time(self, kv_tokens: int) -> float:
+        """Disaggregated hand-off cost: move ``kv_tokens`` of KV pages over
+        the interconnect (CostModel.migration_time semantics)."""
+        return self.cost.migration_time(kv_tokens * self.cost.kv_bytes_tok)
 
     def est_iter_time(self, prefill_tokens: int, decode_batch: int,
                       avg_ctx: float, queue_len: int) -> float:

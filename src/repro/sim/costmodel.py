@@ -116,6 +116,34 @@ class CostModel:
         t_mem = (tokens * self.kv_bytes_tok) / (self.hw.hbm_bw * self.hw.bw_eff)
         return max(t_comp, t_mem) + self._a2a_time(tokens, cross_frac)
 
+    def prefill_layer_time(self, tokens: int, moe_mult: float = 1.0,
+                           cross_frac: float = 0.5) -> float:
+        """ONE layer's slice of ``prefill_time`` — the unit of work a
+        layered-prefill micro-step charges (paper family: "From Tokens to
+        Layers" interleaves prefill with decode at layer boundaries, so
+        decode stalls for one layer, not one chunk).
+
+        Per-layer split of the fused formula: the linear FLOPs
+        (2·active_params·tokens) and the causal-quadratic attention term are
+        uniform across layers; the KV-write HBM term is one layer's share of
+        ``kv_bytes_tok``; A2A is averaged over layers (MoE layers pay it,
+        dense layers don't — the scheduler charges uniform micro-steps).
+        Every term is its fused total over ``num_layers``, so by construction
+
+            num_layers * prefill_layer_time(T) == prefill_time(T)
+
+        — n layered micro-steps charge exactly what one fused chunk does;
+        the win is that decode interleaves at every boundary."""
+        if tokens <= 0:
+            return 0.0
+        n = max(self.cfg.num_layers, 1)
+        lin = 2.0 * self.active_params * tokens / n
+        attn = 2.0 * tokens * tokens * self.cfg.d_model \
+            * self.cfg.num_attention_layers() / max(self.cfg.num_layers, 1) / n
+        t_comp = self._compute_time(lin + attn, moe_mult, tokens)
+        t_mem = (tokens * self.kv_bytes_tok / n) / (self.hw.hbm_bw * self.hw.bw_eff)
+        return max(t_comp, t_mem) + self._a2a_time(tokens, cross_frac) / n
+
     def decode_time(self, batch: int, avg_ctx: float, moe_mult: float = 1.0,
                     cross_frac: float = 0.5, rep_factor: float = 1.0) -> float:
         """Memory-bound phase: weights resident on this device + KV reads.

@@ -50,8 +50,12 @@ class SimEngine:
     def __init__(self, engine_id: int, cost: CostModel, gcfg: GimbalConfig,
                  sjf: bool, expert_level, *, prefill_budget: int = 2048,
                  max_running: int = 256, kv_pool_tokens: int = 0,
-                 max_ctx_tokens=None, kv_block_size: int = 1):
+                 max_ctx_tokens=None, kv_block_size: int = 1,
+                 role: str = "unified", prefill_mode: str = "chunked"):
         self.engine_id = engine_id
+        # disaggregated serving role: Cluster.poll_handoffs collects finished
+        # prefills off "prefill" engines; DispatchCore routes by role
+        self.role = role
         self.backend = CostModelBackend(cost, expert_level,
                                         max_running=max_running,
                                         kv_pool_tokens=kv_pool_tokens,
@@ -63,7 +67,8 @@ class SimEngine:
         self.core = SchedulerCore(
             self.backend, SJFQueue(gcfg, policy="sjf" if sjf else "fcfs"),
             gcfg, prefill_budget=prefill_budget, engine_id=engine_id,
-            expert_level=expert_level, prefix_cache=prefix)
+            expert_level=expert_level, prefix_cache=prefix,
+            prefill_mode=prefill_mode)
 
     def submit(self, r: Request, now: float) -> bool:
         """False when SLO-aware admission control shed the request."""
@@ -152,6 +157,12 @@ class SimResult:
     detect_s: Optional[float] = None
     # failover recovery: first failure -> last orphan finished or shed
     recovery_s: Optional[float] = None
+    # --- disaggregated prefill/decode telemetry (roles= runs) ---
+    # (req_id, src, dst) KV hand-off delivery stream — the disagg parity
+    # oracle — and the total seconds of KV pages on the interconnect
+    kv_transfers: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)
+    kv_transfer_s: float = 0.0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -177,7 +188,9 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
              max_running: int = 256, metric_delay: float = 0.05,
              kv_pool_tokens: int = 0, hot_boost: float = 8.0,
              drill=None, health=None, elastic=None,
-             warmup_s: Optional[float] = None) -> SimResult:
+             warmup_s: Optional[float] = None,
+             prefill_mode: str = "chunked",
+             roles: Optional[Sequence[str]] = None) -> SimResult:
     """Run one experiment: a trace against one variant (paper §V-A.7).
 
     ``hot_boost`` is the hot-expert-skew knob: how hot the synthetic prior's
@@ -193,7 +206,15 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
     warm-up charged to every added engine (None = time to move one engine's
     full weights at the cost model's link bandwidth).  All lifecycle ops go
     through the SAME serving ``Cluster`` API, so the lifecycle + assignment
-    streams stay parity-comparable with the live plane."""
+    streams stay parity-comparable with the live plane.
+
+    Disaggregation (the prefill axis): ``prefill_mode`` selects chunked
+    (fused, historical) vs layered (per-layer micro-step) prefill admission
+    on every engine; ``roles`` assigns per-engine serving roles, e.g.
+    ``("prefill", "decode")`` for a 1P+1D topology — role-aware dispatch
+    sends fresh requests to prefill engines and the cluster hands finished
+    prefills to decode engines with the KV-transfer cost on the clock
+    (engines beyond ``len(roles)`` default to "unified")."""
     gcfg = gcfg or GimbalConfig()
     hwp = PROFILES[hw] if isinstance(hw, str) else hw
     flags = variant_flags(variant)
@@ -206,10 +227,12 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
     cost = CostModel(cfg, hwp, n_engines)
 
     def make_engine(i: int) -> SimEngine:
+        role = roles[i] if roles is not None and i < len(roles) else "unified"
         return SimEngine(i, cost, gcfg, flags["sjf"], experts,
                          prefill_budget=prefill_budget,
                          max_running=max_running,
-                         kv_pool_tokens=kv_pool_tokens)
+                         kv_pool_tokens=kv_pool_tokens,
+                         role=role, prefill_mode=prefill_mode)
 
     if warmup_s is None:
         warmup_s = (cost.migration_time(cost.nonexpert_bytes
@@ -265,7 +288,9 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
         t_eng, eid_eng = min(busy) if busy else (inf, -1)
         t_arr = reqs[i_req].arrival_time if i_req < n_total else inf
         t_drill = runner.next_time() if runner is not None else inf
-        t_next = min(t_eng, t_arr, t_drill, t_ctrl)
+        t_xfer = cluster.next_transfer_time()
+        t_xfer = inf if t_xfer is None else t_xfer
+        t_next = min(t_eng, t_arr, t_drill, t_ctrl, t_xfer)
         if t_next == inf:
             raise RuntimeError(
                 f"simulation stalled at {len(finished)}/{n_total} finished: "
@@ -283,6 +308,12 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
             runner.poll(cluster, t_drill)
             _sync_clocks(cluster, t_engine, steps, t_drill)
             continue
+        if t_xfer <= t_next:
+            # a KV hand-off finished its wire time on an otherwise-quiet
+            # cluster: deliver it (role-aware re-dispatch to a decode engine)
+            cluster.poll_handoffs(t_xfer)
+            _sync_clocks(cluster, t_engine, steps, t_xfer)
+            continue
         if t_ctrl <= t_next:
             for e in list(cluster.engines.values()):
                 if e.healthy:           # heartbeat: idle + warming engines too
@@ -298,6 +329,11 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
         steps[eid_eng] += 1
         finished.extend(done)
         bus.publish(eng.metrics(t_engine[eid_eng]))
+        if getattr(eng, "role", "unified") == "prefill":
+            # collect finished prefills for hand-off the moment the engine's
+            # iteration ends; delivery happens at the t_xfer event above
+            if cluster.poll_handoffs(t_engine[eid_eng]):
+                _sync_clocks(cluster, t_engine, steps, t_engine[eid_eng])
 
     everyone = cluster._all_engines()
     shed_all = cluster.shed_requests()
@@ -337,4 +373,6 @@ def simulate(requests: Sequence[Request], variant: str, cfg: ModelConfig,
         slo=cluster.slo_report(), assignments=dispatch.assignment_log(),
         lifecycle=dispatch.lifecycle_log(), fault_log=list(cluster.fault_log),
         n_shed=len(shed_all), rerouted=cluster.rerouted,
-        detect_s=detect_s, recovery_s=recovery_s)
+        detect_s=detect_s, recovery_s=recovery_s,
+        kv_transfers=cluster.kv_transfer_log(),
+        kv_transfer_s=cluster.kv_transfer_s)

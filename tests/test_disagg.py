@@ -1,0 +1,302 @@
+"""Layered prefill admission + disaggregated prefill/decode roles (fast lane).
+
+Cost-model-plane unit tests for the prefill-path refactor:
+
+  * per-layer cost exactness: ``num_layers * prefill_layer_time(T)`` equals
+    the fused ``prefill_time(T)`` by construction, so layered mode redates
+    work without inventing or losing any;
+  * the layered state machine: admission enters an n_layers micro-step
+    pipeline, first token lands when the last layer completes, in-flight
+    pipeline tokens hold the chunked budget, zero-charge admits bypass;
+  * estimate_ttft prices the final PARTIAL chunk at its actual size
+    (regression: it used to charge every iteration a full chunk);
+  * role-aware dispatch: fresh requests to prefill/unified engines,
+    KV-migrated hand-offs to decode/unified ones, with fallback;
+  * the cluster hand-off loop: a 1P+1D topology moves every finished
+    prefill to the decode engine with the transfer cost on the clock,
+    preserving first-token times and generation progress.
+"""
+import numpy as np
+import pytest
+
+from repro.core.gimbal import make_sim_expert_level
+from repro.core.types import EngineMetrics, GimbalConfig, Request
+from repro.models.config import ModelConfig
+from repro.serving.cluster import Cluster
+from repro.sim.costmodel import CostModel, PROFILES
+from repro.sim.simulator import SimEngine, simulate
+
+
+def tiny_moe(num_layers=4):
+    return ModelConfig(name="t", family="moe", num_layers=num_layers,
+                       d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                       d_ff=64, vocab_size=64, num_experts=4, moe_top_k=2,
+                       moe_d_ff=32, capacity_factor=8.0, dtype="float32")
+
+
+def req(rid, plen=64, out=4, t=0.0, user=None):
+    return Request(req_id=rid, prompt_len=plen, max_new_tokens=out,
+                   arrival_time=t, user_id=user)
+
+
+def make_engine(prefill_mode="chunked", role="unified", num_layers=4,
+                prefill_budget=256, max_running=8, gcfg=None, engine_id=0):
+    gcfg = gcfg or GimbalConfig(tau=10_000)
+    cfg = tiny_moe(num_layers)
+    level = make_sim_expert_level("gimbal", cfg, 1, gcfg)
+    return SimEngine(engine_id, CostModel(cfg, PROFILES["a100"], 1), gcfg,
+                     sjf=True, expert_level=level,
+                     prefill_budget=prefill_budget, max_running=max_running,
+                     kv_pool_tokens=8192, role=role,
+                     prefill_mode=prefill_mode)
+
+
+# --- per-layer cost slice ----------------------------------------------------
+
+@pytest.mark.parametrize("tokens", [1, 17, 256, 2048])
+@pytest.mark.parametrize("num_layers", [1, 2, 4, 9])
+def test_layer_slices_sum_to_fused_prefill(tokens, num_layers):
+    cm = CostModel(tiny_moe(num_layers), PROFILES["a100"], 2)
+    fused = cm.prefill_time(tokens, moe_mult=1.3, cross_frac=0.4)
+    per = cm.prefill_layer_time(tokens, moe_mult=1.3, cross_frac=0.4)
+    assert per > 0
+    assert num_layers * per == pytest.approx(fused, rel=1e-9)
+
+
+def test_layer_time_zero_tokens():
+    cm = CostModel(tiny_moe(), PROFILES["a100"], 2)
+    assert cm.prefill_layer_time(0) == 0.0
+
+
+# --- the layered state machine -----------------------------------------------
+
+def test_layered_first_token_after_n_layers_steps():
+    n_layers = 4
+    eng = make_engine("layered", num_layers=n_layers)
+    core = eng.core
+    core.submit(req(0), 0.0)
+    t = 0.0
+    for k in range(n_layers):
+        # mid-pipeline: holds a prefill seat, decodes nothing, emits nothing
+        t, done = core.step(t)
+        assert done == []
+        if k < n_layers - 1:
+            assert len(core._prefilling) == 1
+            assert core.num_running() == 1 and not core.running
+    # last layer completed: first token emitted, request decodes from now on
+    assert not core._prefilling and len(core.running) == 1
+    r = core.running[0].r
+    assert r.first_token_time is not None and r.generated == 1
+    admits = [(k, s) for k, s, _ in core.event_log() if k == "admit"]
+    assert admits == [("admit", 0)]             # admission step = micro-step 1
+
+
+def test_layered_matches_chunked_admission_decisions():
+    """The admission SCAN is mode-independent: same queue, same budget, same
+    admit set (only the dating and first-token step differ)."""
+    for mode in ("chunked", "layered"):
+        eng = make_engine(mode, prefill_budget=100)
+        core = eng.core
+        for i, plen in enumerate([60, 30, 50]):     # 30+50 fit, 60 must wait
+            core.submit(req(i, plen=plen), 0.0)
+        core.step(0.0)
+        admitted = [rid for k, s, rid in core.event_log()
+                    if k == "admit" and s == 0]
+        assert admitted == [1, 2]                   # SJF order, budget-gated
+
+
+def test_layered_pipeline_tokens_hold_the_budget():
+    """In-flight pipeline tokens charge the budget until their LAST layer, so
+    total concurrent prefill work stays bounded by one budget's worth."""
+    n_layers = 4
+    eng = make_engine("layered", num_layers=n_layers, prefill_budget=100)
+    core = eng.core
+    core.submit(req(0, plen=40), 0.0)
+    core.submit(req(1, plen=80), 0.0)
+    t, _ = core.step(0.0)
+    assert [p.r.req_id for p in core._prefilling] == [0]   # 80 > 100-40
+    for _ in range(n_layers - 1):
+        t, _ = core.step(t)
+    # req 0 left the pipeline on its n-th micro-step; that SAME step's
+    # admission scan still saw its tokens held, so req 1 enters one step later
+    assert not core._prefilling
+    assert core.running[0].r.req_id == 0
+    core.step(t)
+    assert [p.r.req_id for p in core._prefilling] == [1]
+
+
+def test_layered_zero_charge_admit_bypasses_pipeline():
+    """A KV-migrated hand-off has nothing to prefill: it starts (resumes) in
+    its admission step instead of burning n_layers micro-steps."""
+    eng = make_engine("layered")
+    core = eng.core
+    r = req(0, plen=64)
+    r.kv_migrated = True
+    r.first_token_time = 0.123
+    r.generated = 1
+    core.submit(r, 0.0)
+    core.step(0.0)
+    assert not core._prefilling and len(core.running) == 1
+    assert r.first_token_time == 0.123          # progress survived the move
+    assert r.generated == 1
+
+
+def test_layered_drain_requeues_pipeline_as_fresh_work():
+    """Partial layer progress is not transferable KV: a mid-pipeline request
+    drains as fresh work (even under migrate=True) with clean accounting."""
+    eng = make_engine("layered", num_layers=4)
+    core = eng.core
+    core.submit(req(0), 0.0)
+    core.step(0.0)
+    assert core._prefilling
+    out = core.drain(migrate=True)
+    assert [r.req_id for r in out] == [0]
+    assert not out[0].kv_migrated and out[0].first_token_time is None
+    assert core.kv_tokens == 0 and not core.ctx_tokens
+    assert core.idle
+
+
+def test_unknown_prefill_mode_raises():
+    with pytest.raises(ValueError):
+        make_engine("fused")
+
+
+# --- estimate_ttft partial-chunk pricing (S1 regression) ----------------------
+
+def test_estimate_ttft_prices_partial_final_chunk():
+    """A prompt of 1.5 x prefill_budget = one full chunk + one HALF chunk:
+    the estimate must be est(budget) + est(budget/2), not 2 x est(budget)."""
+    budget = 256
+    eng = make_engine(prefill_budget=budget)
+    core = eng.core
+    be = core.backend
+    r = req(0, plen=budget + budget // 2)
+    est = core.estimate_ttft(r, 0.0)
+    expected = (be.est_iter_time(budget, 0, 0.0, queue_len=0)
+                + be.est_iter_time(budget // 2, 0, 0.0, queue_len=0))
+    assert est == pytest.approx(expected, rel=1e-12)
+    over = 2 * be.est_iter_time(budget, 0, 0.0, queue_len=0)
+    assert est < over                            # strictly below the old value
+    # exact multiples still price every chunk full
+    r2 = req(1, plen=2 * budget)
+    assert core.estimate_ttft(r2, 0.0) == pytest.approx(
+        2 * be.est_iter_time(budget, 0, 0.0, queue_len=0), rel=1e-12)
+    # sub-chunk prompts price at their own size
+    r3 = req(2, plen=budget // 4)
+    assert core.estimate_ttft(r3, 0.0) == pytest.approx(
+        be.est_iter_time(budget // 4, 0, 0.0, queue_len=0), rel=1e-12)
+
+
+# --- role-aware dispatch ------------------------------------------------------
+
+def _metrics(ids, now=0.0):
+    return {e: EngineMetrics(engine_id=e, timestamp=now, healthy=True)
+            for e in ids}
+
+
+def test_role_pool_routes_fresh_vs_migrated():
+    from repro.core.gimbal import make_router
+    router = make_router("combined", [0, 1, 2], GimbalConfig())
+    router.roles.update({0: "prefill", 1: "decode", 2: "unified"})
+    fresh, moved = req(0), req(1)
+    moved.kv_migrated = True
+    assert sorted(router._role_pool(fresh)) == [0, 2]
+    assert sorted(router._role_pool(moved)) == [1, 2]
+    assert router.select(fresh, _metrics([0, 1, 2])) in (0, 2)
+    assert router.select(moved, _metrics([0, 1, 2])) in (1, 2)
+
+
+def test_role_pool_falls_back_when_empty():
+    from repro.core.gimbal import make_router
+    router = make_router("rr", [0, 1], GimbalConfig())
+    router.roles.update({0: "prefill", 1: "prefill"})
+    moved = req(0)
+    moved.kv_migrated = True
+    # no decode/unified engine exists: degraded beats stranded
+    assert router._role_pool(moved) == [0, 1]
+
+
+def test_all_unified_roles_is_legacy_behavior():
+    from repro.core.gimbal import make_router
+    router = make_router("rr", [0, 1], GimbalConfig())
+    router.roles.update({0: "unified", 1: "unified"})
+    seen = [router.select(req(i), _metrics([0, 1])) for i in range(4)]
+    assert seen == [0, 1, 0, 1]                  # plain round-robin
+
+
+# --- the cluster hand-off loop ------------------------------------------------
+
+def make_disagg_cluster(prefill_mode="chunked", gcfg=None):
+    gcfg = gcfg or GimbalConfig(tau=10_000)
+    cfg = tiny_moe()
+    level = make_sim_expert_level("combined", cfg, 2, gcfg)
+    engines = [SimEngine(i, CostModel(cfg, PROFILES["a100"], 2), gcfg,
+                         sjf=True, expert_level=level, prefill_budget=256,
+                         max_running=8, kv_pool_tokens=8192, role=role,
+                         prefill_mode=prefill_mode)
+               for i, role in enumerate(("prefill", "decode"))]
+    return Cluster(engines, variant="combined", gimbal_cfg=gcfg)
+
+
+@pytest.mark.parametrize("prefill_mode", ["chunked", "layered"])
+def test_cluster_hands_off_prefill_to_decode_engine(prefill_mode):
+    c = make_disagg_cluster(prefill_mode)
+    for i in range(6):
+        assert c.submit(req(i, plen=64, out=8), 0.0) == 0   # prefill role
+    done = c.run_until_drained(t0=0.0, dt=0.05)
+    assert sorted(r.req_id for r in done) == list(range(6))
+    # every request crossed the wire exactly once, prefill -> decode
+    assert sorted(rid for rid, _, _ in c.kv_transfers) == list(range(6))
+    assert all((src, dst) == (0, 1) for _, src, dst in c.kv_transfers)
+    assert c.kv_transfer_s > 0.0                 # the move cost real seconds
+    stats = c.kv_transfer_stats()
+    assert stats["kv_transfers"] == 6 and stats["in_flight"] == 0
+    for r in done:
+        assert r.finish_time > r.first_token_time   # decoded after the move
+        assert r.generated == 8                     # no tokens lost in transit
+        assert r.engine_id == 1                     # finished on decode role
+    # the prefill engine emitted one handoff event per request
+    handoffs = [rid for k, _, rid in c.engines[0].core.event_log()
+                if k == "handoff"]
+    assert sorted(handoffs) == list(range(6))
+    # ... and never decoded past the first token (no ping-pong)
+    assert all(k != "finish" for k, _, _ in c.engines[0].core.event_log())
+
+
+def test_handoff_preserves_ttft_and_charges_no_reprefill():
+    c = make_disagg_cluster()
+    c.submit(req(0, plen=128, out=4), 0.0)
+    c.step(0.0)             # prefill + first token + hand-off collection
+    (ready, r0, src), = c._in_transfer
+    assert src == 0 and r0.kv_migrated
+    ttft = r0.first_token_time
+    assert ttft is not None
+    done = c.run_until_drained(t0=0.05, dt=0.05)
+    assert len(done) == 1
+    r = done[0]
+    assert r.first_token_time == ttft            # TTFT minted on the P engine
+    # the decode engine admitted it with zero prefill charge
+    assert getattr(r, "_cached", 0) == r.prompt_len or r.generated == 4
+
+
+def test_simulate_disagg_transfers_and_parity_fields():
+    """simulate() wires the transfer event source: a 1P+1D run moves every
+    request across and reports the transfer stream/seconds in SimResult."""
+    cfg = tiny_moe()
+    reqs = [req(i, plen=96, out=6, t=i * 0.02) for i in range(12)]
+    res = simulate(reqs, "combined", cfg, n_engines=2, prefill_budget=256,
+                   roles=("prefill", "decode"), prefill_mode="layered")
+    assert res.report.n == 12
+    assert sorted(rid for rid, _, _ in res.kv_transfers) == list(range(12))
+    assert res.kv_transfer_s > 0.0
+
+
+def test_unified_cluster_never_transfers():
+    c = make_disagg_cluster()
+    for e in c.engines.values():
+        e.role = "unified"
+    c.dispatch.roles.update({0: "unified", 1: "unified"})
+    for i in range(4):
+        c.submit(req(i), 0.0)
+    c.run_until_drained(t0=0.0, dt=0.05)
+    assert c.kv_transfers == [] and c.kv_transfer_s == 0.0

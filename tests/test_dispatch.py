@@ -60,7 +60,7 @@ def test_directory_longest_prefix_and_best_engine():
     # prefix property: a matching later block without its parent run is dead
     d2 = PrefixDirectory(block_size=BS)
     d2.record(0, t)
-    d2._held[0].remove(block_hashes(t, BS)[0])    # knock out the first block
+    d2._discard(0, block_hashes(t, BS)[0])        # knock out the first block
     assert d2.longest_prefix(t) == {}
 
 
@@ -103,6 +103,62 @@ def test_directory_rejects_mismatched_block_size():
     import pytest
     with pytest.raises(ValueError):
         d.attach(0, PrefixCache(block_size=8))
+
+
+def _linear_longest_prefix(d, tokens):
+    """Reference oracle: the pre-index per-engine scan — walk every engine's
+    held set and count its leading matched run directly."""
+    hashes = block_hashes(tokens, d.block_size)
+    out = {}
+    for eid, held in d._held.items():
+        matched = 0
+        for h in hashes:
+            if h in held:
+                matched += 1
+            else:
+                break
+        if matched:
+            out[eid] = matched * d.block_size
+    return out
+
+
+def test_directory_index_matches_linear_scan_at_scale():
+    """S2: the inverted-index longest_prefix is byte-identical to scanning
+    every engine, across hundreds of engines with overlapping prefixes,
+    LRU-churned caches, purges and re-records."""
+    rng = np.random.default_rng(7)
+    d = PrefixDirectory(block_size=BS)
+    n_engines = 300
+    # a shared common stem makes deep overlapping runs; per-engine tails
+    # make the match lengths differ engine-to-engine
+    stem = toks(8)
+    caches = {}
+    for e in range(n_engines):
+        depth = int(rng.integers(0, 9))           # 0..8 blocks of the stem
+        if depth:
+            d.record(e, stem[:depth * BS])
+        if rng.random() < 0.3:                    # some engines also attach
+            c = PrefixCache(block_size=BS, capacity_blocks=6)
+            d.attach(e, c)
+            c.insert(stem[:4 * BS], now=0.0)
+            caches[e] = c
+    # churn: evictions via capacity, purges, re-records
+    for e, c in caches.items():
+        c.insert(toks(4, base=90_000 + e * 1000), now=1.0)   # LRU-evict stem
+    for e in range(0, n_engines, 17):
+        d.purge_engine(e)
+    for e in range(0, n_engines, 23):
+        d.record(e, stem[:3 * BS])
+    probes = [stem, stem[:2 * BS], toks(4, base=90_000 + 5000),
+              toks(2, base=77_000)]
+    for p in probes:
+        lp = _linear_longest_prefix(d, p)
+        assert d.longest_prefix(p) == lp
+        if lp:
+            best = min(lp, key=lambda e: (-lp[e], e))
+            assert d.best_engine(p) == (best, lp[best])
+        else:
+            assert d.best_engine(p) is None
 
 
 # --- variant registration ----------------------------------------------------
